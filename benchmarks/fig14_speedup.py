@@ -1,0 +1,26 @@
+"""Fig 14: Tetris-SDK speed-up vs img2col/SDK/VW-SDK across array sizes
+(64x64 .. 512x512) for the three benchmark networks."""
+from __future__ import annotations
+
+from repro.core import ArrayConfig, map_net, networks
+
+from .common import Row, timed
+
+
+def run(full: bool = False):
+    rows = []
+    sizes = (64, 128, 256, 512) if full else (128, 512)
+    for net in ("cnn8", "inception", "densenet40"):
+        layers = networks.NETWORKS[net]()
+        for s in sizes:
+            arr = ArrayConfig(s, s)
+            base = {}
+            for alg in ("img2col", "SDK", "VW-SDK", "Tetris-SDK"):
+                m, us = timed(map_net, net, layers, arr, alg)
+                base[alg] = m.total_cycles
+            der = (f"tetris_cycles={base['Tetris-SDK']};"
+                   f"x_img2col={base['img2col']/base['Tetris-SDK']:.2f};"
+                   f"x_sdk={base['SDK']/base['Tetris-SDK']:.2f};"
+                   f"x_vw={base['VW-SDK']/base['Tetris-SDK']:.2f}")
+            rows.append(Row(f"fig14/{net}/{s}x{s}", us, der))
+    return rows

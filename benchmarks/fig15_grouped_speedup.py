@@ -1,0 +1,22 @@
+"""Fig 15: TetrisG-SDK speed-up with grouped convolutions per network.
+Paper: ~1.5x CNN8, ~1.3x Inception, ~2x DenseNet40 vs VW-SDK @512x512."""
+from __future__ import annotations
+
+from repro.core import ArrayConfig, map_net, networks
+
+from .common import Row, timed
+
+
+def run(full: bool = False):
+    arr = ArrayConfig(512, 512)
+    rows = []
+    paper = {"cnn8": 1.5, "inception": 1.3, "densenet40": 2.0}
+    for net in ("cnn8", "inception", "densenet40"):
+        layers = networks.NETWORKS[net]()
+        vw = map_net(net, layers, arr, "VW-SDK").total_cycles
+        kw = {"groups": (1, 2)} if net == "inception" else {}
+        m, us = timed(map_net, net, layers, arr, "TetrisG-SDK", **kw)
+        rows.append(Row(
+            f"fig15/{net}", us,
+            f"x_vw={vw/m.total_cycles:.2f};paper~{paper[net]}"))
+    return rows

@@ -1,0 +1,36 @@
+"""Fig 17/18: system-level latency / dynamic energy / EDAP on the CIM
+simulator (NeuroSim-style analytical model, 22nm/1GHz/512x512 SRAM).
+Paper: TetrisG vs VWC latency/energy 2.4x/1.7x (CNN8), 1.3x/1.2x
+(Inception), 1.3x/1.6x (DenseNet40); EDAP 4.27x/1.54x/2.06x."""
+from __future__ import annotations
+
+from repro.core import ArrayConfig, map_net, networks
+from repro.core.simulator import simulate
+
+from .common import Row, timed
+
+
+def run(full: bool = False):
+    arr = ArrayConfig(512, 512)
+    rows = []
+    for net in ("cnn8", "inception", "densenet40"):
+        layers = networks.NETWORKS[net]()
+        sims = {}
+        us_tot = 0.0
+        for alg in ("img2col", "VWC-SDK", "TetrisG-SDK"):
+            kw = ({"groups": (1, 2)} if
+                  (alg == "TetrisG-SDK" and net != "cnn8") else {})
+            (m, us) = timed(lambda: simulate(
+                map_net(net, layers, arr, alg, **kw)))
+            sims[alg] = m
+            us_tot += us
+        g, v, i = sims["TetrisG-SDK"], sims["VWC-SDK"], sims["img2col"]
+        rows.append(Row(
+            f"fig17/{net}", us_tot,
+            f"lat_x_vwc={v.latency_s/g.latency_s:.2f};"
+            f"en_x_vwc={v.energy_j/g.energy_j:.2f}"))
+        rows.append(Row(
+            f"fig18/{net}", us_tot,
+            f"edap_x_vwc={v.edap/g.edap:.2f};"
+            f"edap_x_img2col={i.edap/g.edap:.2f}"))
+    return rows

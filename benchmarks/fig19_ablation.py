@@ -1,0 +1,76 @@
+"""Fig 19: stepwise ablation on CNN8 — VWC baseline, +square-inclined
+(SI), +marginal windows (MW), +depth-optimal (DO), +grouping (G).
+
+Implemented by degrading the Tetris search: SI only = tetris without
+marginal handling or remainder re-opt; +MW adds marginal windows; +DO
+adds the depth-optimal remainder; +G adds grouping (the full TetrisG)."""
+from __future__ import annotations
+
+import math
+
+from repro.core import (ArrayConfig, ConvLayerSpec, LayerMapping, map_net,
+                        networks)
+from repro.core import baselines, cycles as cyc, grouped, tetris
+from repro.core.simulator import simulate
+from repro.core.types import MacroGrid, NetworkMapping, TileMapping, Window
+
+from .common import Row, timed
+
+ARR = ArrayConfig(512, 512)
+
+
+def _si_only(layer, array, grid=MacroGrid(), **kw):
+    """Square-inclined windows, ceil counts, no marginal/DO windows."""
+    best = None
+    for w in cyc.candidate_windows(layer, array):
+        ic_t = cyc.ic_t_for(w, layer.ic, array)
+        oc_t = cyc.oc_t_for(w, layer, array)
+        if ic_t < 1 or oc_t < 1:
+            continue
+        n, _ = cyc.n_windows(layer, w, marginal=False)
+        t = TileMapping(window=w, depth=layer.ic, ic_t=ic_t, oc_t=oc_t,
+                        ar_c=math.ceil(layer.ic / ic_t),
+                        ac_c=math.ceil(layer.oc / oc_t), n_regular=n)
+        m = LayerMapping(layer=layer, array=array, algorithm="SI",
+                         tiles=(t,), grid=grid)
+        # square preference as tie-break (Alg 3)
+        key = (m.cycles, abs(w.pw_w - w.pw_h))
+        if best is None or key < (best.cycles,
+                                  abs(best.tiles[0].window.pw_w
+                                      - best.tiles[0].window.pw_h)):
+            best = m
+    return best
+
+
+def _mw(layer, array, grid=MacroGrid(), **kw):
+    """SI + marginal windows (no depth-optimal remainder)."""
+    return tetris.tetris_layer(layer, array, grid, max_prune=0)
+
+
+def _do(layer, array, grid=MacroGrid(), **kw):
+    return tetris.tetris_layer(layer, array, grid, max_prune=1)
+
+
+def run(full: bool = False):
+    layers = networks.cnn8()
+    steps = [
+        ("vwc", lambda l, a, g: baselines.vwc_sdk(l, a, g)),
+        ("+SI", _si_only),
+        ("+MW", _mw),
+        ("+DO", _do),
+        ("+G", lambda l, a, g: grouped.tetrisg_layer(l, a, g)),
+    ]
+    rows = []
+    prev = None
+    for name, mapper in steps:
+        def netmap():
+            ms = tuple(mapper(l, ARR, MacroGrid()) for l in layers)
+            return NetworkMapping(name="cnn8", algorithm=name, array=ARR,
+                                  layers=ms)
+        net, us = timed(netmap)
+        sim = simulate(net)
+        der = (f"cycles={net.total_cycles};energy={sim.energy_j:.2e};"
+               f"latency={sim.latency_s:.2e}")
+        rows.append(Row(f"fig19/cnn8/{name}", us, der))
+        prev = net
+    return rows

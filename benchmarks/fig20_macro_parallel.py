@@ -1,0 +1,33 @@
+"""Fig 20: EDAP of TetrisG-SDK normalized to Tetris-SDK across macro
+budgets P (64x64 macros, Alg 2 grid search).  Paper: best reductions
+70 % (CNN8, P=8), 68 % (Inception, P=2), 36 % (DenseNet40, P=32)."""
+from __future__ import annotations
+
+from repro.core import ArrayConfig, grid_search, networks
+from repro.core.simulator import simulate
+
+from .common import Row, timed
+
+
+def run(full: bool = False):
+    arr = ArrayConfig(64, 64)
+    budgets = (1, 2, 4, 8, 16, 32) if full else (2, 8)
+    rows = []
+    nets = ("cnn8", "inception", "densenet40") if full \
+        else ("cnn8", "inception")
+    for net in nets:
+        layers = networks.NETWORKS[net]()
+        for p in budgets:
+            def both():
+                g = grid_search(net, layers, arr, p_max=p,
+                                algorithm="TetrisG-SDK", groups=(1, 2, 4))
+                t = grid_search(net, layers, arr, p_max=p,
+                                algorithm="Tetris-SDK")
+                return simulate(g.best), simulate(t.best), g.best
+            (sg, st, best), us = timed(both)
+            rows.append(Row(
+                f"fig20/{net}/P{p}", us,
+                f"edap_reduction={1 - sg.edap/st.edap:.0%};"
+                f"grid={best.grid.r}x{best.grid.c};"
+                f"active={sg.active_macros}"))
+    return rows

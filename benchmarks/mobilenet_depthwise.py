@@ -1,0 +1,22 @@
+"""SIV-C3 MobileNet finding: TetrisG == VWC on depthwise/pointwise mixes
+(no cross-channel reuse to exploit); large win vs img2col."""
+from __future__ import annotations
+
+from repro.core import ArrayConfig, map_net, networks
+
+from .common import Row, timed
+
+
+def run(full: bool = False):
+    arr = ArrayConfig(512, 512)
+    layers = networks.mobilenet()
+    cc = {}
+    us_tot = 0.0
+    for alg in ("img2col", "VWC-SDK", "Tetris-SDK", "TetrisG-SDK"):
+        m, us = timed(map_net, "mobilenet", layers, arr, alg)
+        cc[alg] = m.total_cycles
+        us_tot += us
+    return [Row("mobilenet/depthwise", us_tot,
+                f"tetrisg={cc['TetrisG-SDK']};"
+                f"x_img2col={cc['img2col']/cc['TetrisG-SDK']:.1f};"
+                f"eq_vwc={cc['TetrisG-SDK'] == cc['VWC-SDK']}")]

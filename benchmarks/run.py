@@ -1,0 +1,37 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (harness contract).  ``--full``
+adds the slow sweeps (all array sizes, all macro budgets, grouped-conv
+accuracy training).
+"""
+from __future__ import annotations
+
+import argparse
+
+from . import (fig14_speedup, fig15_grouped_speedup, fig17_18_system,
+               fig19_ablation, fig20_macro_parallel, kernels_bench,
+               mobilenet_depthwise, table1_mapping, table2_grouped)
+
+MODULES = [table1_mapping, table2_grouped, fig14_speedup,
+           fig15_grouped_speedup, fig17_18_system, fig19_ablation,
+           fig20_macro_parallel, mobilenet_depthwise, kernels_bench]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="slow sweeps: all sizes/budgets + accuracy runs")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module name")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    for mod in MODULES:
+        if args.only and args.only not in mod.__name__:
+            continue
+        for row in mod.run(full=args.full):
+            print(row.csv(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

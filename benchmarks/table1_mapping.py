@@ -1,0 +1,31 @@
+"""Table I: per-layer windows + total cycles for CNN8 / Inception on a
+512x512 array, all algorithms.  Paper anchors: VW-SDK=128 / Tetris=116 /
+TetrisG=84 on CNN8 (exact); Inception deltas discussed in EXPERIMENTS.md."""
+from __future__ import annotations
+
+from repro.core import ALGORITHMS, ArrayConfig, map_net, networks
+
+from .common import Row, timed
+
+PAPER = {("cnn8", "VW-SDK"): 128, ("cnn8", "Tetris-SDK"): 116,
+         ("cnn8", "TetrisG-SDK"): 84, ("inception", "VW-SDK"): 627,
+         ("inception", "VWC-SDK"): 506, ("inception", "Tetris-SDK"): 557,
+         ("inception", "TetrisG-SDK"): 470}
+
+
+def run(full: bool = False):
+    arr = ArrayConfig(512, 512)
+    rows = []
+    for net in ("cnn8", "inception"):
+        layers = networks.NETWORKS[net]()
+        for alg in ALGORITHMS:
+            kw = {}
+            if alg == "TetrisG-SDK" and net == "inception":
+                kw["groups"] = (1, 2)     # accuracy-constrained (SIV-C1)
+            m, us = timed(map_net, net, layers, arr, alg, **kw)
+            paper = PAPER.get((net, alg))
+            tag = f"cycles={m.total_cycles}"
+            if paper:
+                tag += f";paper={paper}"
+            rows.append(Row(f"table1/{net}/{alg}", us, tag))
+    return rows

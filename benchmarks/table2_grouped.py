@@ -1,0 +1,35 @@
+"""Table II: grouped-convolution accuracy + cycles.
+
+Cycles: all four networks/algorithms (fast).  Accuracy: MNIST/CIFAR/Tiny
+ImageNet are unavailable offline, so the near-lossless claim is tested on
+the seeded synthetic classification task (--full; ~5 min CPU) — the
+deltas G=1 vs G=2 are the reproduction target, not absolute accuracy."""
+from __future__ import annotations
+
+from repro.core import ArrayConfig, map_net, networks
+
+from .common import Row, timed
+
+
+def run(full: bool = False):
+    arr = ArrayConfig(512, 512)
+    rows = []
+    for net in ("cnn8", "densenet40", "inception"):
+        layers = networks.NETWORKS[net]()
+        for alg in ("VW-SDK", "Tetris-SDK", "TetrisG-SDK"):
+            # accuracy-constrained group sets (SIV-C1): CNN8 tolerates up
+            # to G=8 on the proxy task; Inception/DenseNet kept at G<=2
+            kw = ({"groups": (1, 2)} if alg == "TetrisG-SDK"
+                  and net != "cnn8" else {})
+            m, us = timed(map_net, net, layers, arr, alg, **kw)
+            rows.append(Row(f"table2/{net}/{alg}", us,
+                            f"cycles={m.total_cycles}"))
+    if full:
+        from repro.cnn.models import cnn8_config
+        from repro.cnn.train import train_cnn
+        for g in (1, 2, 4):
+            r, us = timed(train_cnn, cnn8_config(group=g), steps=150,
+                          n_train=1024, n_test=256)
+            rows.append(Row(f"table2/accuracy/cnn8-G{g}", us,
+                            f"test_acc={r.test_acc:.3f}"))
+    return rows

@@ -1,0 +1,12 @@
+"""Serve a MoE model: batched prefill + greedy decode with the SWA ring
+cache (mixtral-family) — exercises the EP/grouped expert path the
+paper's grouped convolutions map onto.
+
+    PYTHONPATH=src python examples/serve_moe.py
+"""
+from repro.launch import serve
+
+
+if __name__ == "__main__":
+    serve.main(["--arch", "mixtral_8x7b", "--smoke", "--batch", "2",
+                "--prompt-len", "24", "--gen", "8"])

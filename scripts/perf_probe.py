@@ -1,0 +1,35 @@
+"""Perf probe: compile one cell and print the top HBM/collective
+contributors by jax op-name group (hypothesis-forming tool for SPerf)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import jax
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, build_cell
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch import roofline as rl
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", required=True)
+ap.add_argument("--shape", required=True)
+ap.add_argument("--top", type=int, default=14)
+args = ap.parse_args()
+
+cfg = get_config(args.arch)
+mesh = make_production_mesh()
+fn, a, in_sh, out_sh = build_cell(cfg, SHAPES[args.shape], mesh)
+with mesh:
+    comp = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*a).compile()
+t = analyze_hlo(comp.as_text())
+print(f"flops/chip {t.flops/1e12:.2f} TF | hbm/chip {t.hbm_bytes/1e12:.2f} TB"
+      f" | coll/chip {t.coll_bytes.get('total',0)/1e9:.1f} GB")
+print(f"t_comp {t.flops/rl.PEAK_FLOPS:.2f}s t_mem {t.hbm_bytes/rl.HBM_BW:.2f}s "
+      f"t_coll {t.coll_bytes.get('total',0)/rl.LINK_BW:.2f}s")
+print("\n-- top HBM groups --")
+for g, b in sorted(t.hbm_by_group.items(), key=lambda kv: -kv[1])[:args.top]:
+    print(f"  {b/1e12:8.3f} TB  {g}")
+print("\n-- top collective groups --")
+for g, b in sorted(t.coll_by_group.items(), key=lambda kv: -kv[1])[:args.top]:
+    print(f"  {b/1e9:8.2f} GB  {g}")

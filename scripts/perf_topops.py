@@ -1,0 +1,65 @@
+"""Dump the top individual HBM-traffic ops (with loop amplification)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse, sys, re
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import jax
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, build_cell
+from repro.launch import hlo_analysis as H
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", required=True)
+ap.add_argument("--shape", required=True)
+ap.add_argument("--top", type=int, default=12)
+a = ap.parse_args()
+cfg = get_config(a.arch)
+mesh = make_production_mesh()
+fn, args, in_sh, out_sh = build_cell(cfg, SHAPES[a.shape], mesh)
+with mesh:
+    comp = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args).compile()
+txt = comp.as_text()
+comps = H.parse_computations(txt)
+
+# compute trip multiplier per computation by walking from entry
+trips = {}
+def walk(name, mult, stack=()):
+    if name in stack: return
+    c = comps.get(name)
+    if c is None: return
+    trips[name] = trips.get(name, 0) + mult
+    for op in c.ops:
+        if op.kind == "while":
+            cond = H._COND.search(op.rest); body = H._CALLEE.search(op.rest)
+            t = 1
+            if cond:
+                for o2 in comps.get(cond.group(1), H.Computation("x")).ops:
+                    for cc in H._CONST_INT.findall(o2.rest):
+                        t = max(t, int(cc))
+            if body: walk(body.group(1), mult*t, stack+(name,))
+        elif op.kind in ("fusion","call","conditional","map"):
+            pass  # fusion internals not HBM
+entry = re.search(r"^ENTRY\s+%?([\w.\-]+)", txt, re.M).group(1)
+walk(entry, 1)
+
+rows = []
+bytes_by_name = {}
+for c in comps.values():
+    for op in c.ops:
+        bytes_by_name[op.name] = op.out_bytes
+for cname, mult in trips.items():
+    for op in comps[cname].ops:
+        if op.kind in H._FREE_OPS or op.kind in ("while",):
+            continue
+        bb = op.out_bytes
+        args_txt = op.rest.split("(", 1)
+        if len(args_txt) == 2:
+            for o2 in H._OPERANDS.findall(args_txt[1].split(")")[0]):
+                bb += bytes_by_name.get(o2, 0)
+        rows.append((bb*mult, mult, cname, op))
+rows.sort(key=lambda r: -r[0])
+for bb, mult, cname, op in rows[:a.top]:
+    md = H._METADATA_NAME.search(op.rest)
+    print(f"{bb/1e12:7.2f} TB x{mult:<5d} {op.kind:18s} {op.type_txt[:44]:44s} "
+          f"{(md.group(1)[-70:] if md else cname[:40])}")

@@ -1,0 +1,102 @@
+"""Render EXPERIMENTS.md tables from results/dryrun_{base,opt}/*.json.
+
+    python scripts/roofline_report.py roofline [tag]   # per-cell terms
+    python scripts/roofline_report.py compare          # base vs opt
+    python scripts/roofline_report.py dryrun [tag]     # compile summary
+"""
+import glob
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def fmt_t(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def load(tag, mesh=None):
+    recs = [json.loads(Path(p).read_text())
+            for p in glob.glob(str(ROOT / "results" / tag / "*.json"))]
+    if mesh:
+        recs = [r for r in recs if r["mesh"] == mesh]
+    recs.sort(key=lambda r: (r["arch"], ORDER[r["shape"]]))
+    return recs
+
+
+def roofline_table(tag="dryrun_opt", mesh="16x16"):
+    print(f"\n### Roofline — {tag}, mesh {mesh} (per-chip, v5e constants)\n")
+    print("| arch | shape | status | t_comp | t_mem | t_coll | dominant "
+          "| useful/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in load(tag, mesh):
+        if r["status"] != "OK":
+            reason = r.get("reason", r.get("error", ""))[:38]
+            print(f"| {r['arch']} | {r['shape']} | {r['status']} "
+                  f"({reason}) | | | | | | |")
+            continue
+        f = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | OK | "
+              f"{fmt_t(f['t_compute'])} | {fmt_t(f['t_memory'])} | "
+              f"{fmt_t(f['t_collective'])} | {f['dominant']} | "
+              f"{f['useful_flops_fraction']:.3f} | "
+              f"{f['roofline_fraction']:.4f} |")
+
+
+def compare(mesh="16x16"):
+    base = {(r["arch"], r["shape"]): r for r in load("dryrun_base", mesh)}
+    opt = {(r["arch"], r["shape"]): r for r in load("dryrun_opt", mesh)}
+    print(f"\n### Baseline vs optimized — mesh {mesh} "
+          f"(bound = max roofline term, s/chip)\n")
+    print("| arch | shape | base bound (dom) | opt bound (dom) | speedup "
+          "| base frac | opt frac |")
+    print("|---|---|---|---|---|---|---|")
+    for key in sorted(base, key=lambda k: (k[0], ORDER[k[1]])):
+        b, o = base[key], opt.get(key)
+        if b["status"] != "OK" or not o or o["status"] != "OK":
+            continue
+        fb, fo = b["roofline"], o["roofline"]
+        bb = max(fb["t_compute"], fb["t_memory"], fb["t_collective"])
+        ob = max(fo["t_compute"], fo["t_memory"], fo["t_collective"])
+        print(f"| {key[0]} | {key[1]} | {fmt_t(bb)} ({fb['dominant'][:4]}) "
+              f"| {fmt_t(ob)} ({fo['dominant'][:4]}) | "
+              f"{bb/ob if ob else 0:.2f}x | "
+              f"{fb['roofline_fraction']:.4f} | "
+              f"{fo['roofline_fraction']:.4f} |")
+
+
+def dryrun_table(tag="dryrun_opt"):
+    print(f"\n### Dry-run compile summary — {tag} (both meshes)\n")
+    print("| arch | shape | mesh | compile_s | temp GB/chip | "
+          "coll GB/chip (AG/AR/RS/A2A/CP) |")
+    print("|---|---|---|---|---|---|")
+    for r in load(tag):
+        if r["status"] != "OK":
+            continue
+        c = r["collectives"]
+        parts = "/".join(
+            f"{c.get(k, 0)/1e9:.1f}" for k in
+            ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute"))
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+              f"{r.get('compile_s', 0):.0f} | "
+              f"{r['memory']['temp_bytes']/1e9:.2f} | {parts} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    tag = sys.argv[2] if len(sys.argv) > 2 else "dryrun_opt"
+    if which in ("roofline", "all"):
+        roofline_table(tag)
+    if which == "multi":
+        roofline_table(tag, "2x16x16")
+    if which in ("compare", "all"):
+        compare()
+    if which in ("dryrun",):
+        dryrun_table(tag)

@@ -1,0 +1,3 @@
+# CNN substrate: the paper's benchmark networks in JAX + the CIM-mapped
+# convolution executor (semantic bridge mapping -> compute).
+from .cim_conv import build_weight_matrix, cim_conv2d, reference_conv2d, window_placements

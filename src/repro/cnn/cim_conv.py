@@ -1,0 +1,164 @@
+"""Execute a convolution *exactly as a LayerMapping prescribes* — the
+semantic bridge between the mapping search and real compute.
+
+Every array load of the mapping becomes one (patch-vector @ mapped-weight-
+matrix) product: the weight matrix is the shifted-and-duplicated kernel
+layout of Fig 5 (rows = window pixels x channel tile, columns = kernel
+position x output channel), built by :func:`build_weight_matrix`.  Summing
+partial products over channel loads and scattering per-position outputs
+reconstructs the OFM exactly (up to float summation order) against
+``lax.conv_general_dilated`` — asserted in tests/test_cim_conv.py.
+
+Overlap semantics: border-clamped (ceil-form) and marginal windows may
+recompute output positions already produced by a neighbouring window of
+the same channel pass; recomputed values are identical, so each channel
+pass writes into its own buffer with *set* semantics (idempotent), and
+buffers accumulate across channel passes (the partial-sum adds of the
+shift-and-add peripheral, Fig 3).
+
+This executor is loop-unrolled host-side (placements are static) and is
+the *reference* path; the TPU performance path is kernels/im2win_conv.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import (ConvLayerSpec, LayerMapping, TileMapping)
+
+
+def window_placements(layer: ConvLayerSpec, tile: TileMapping
+                      ) -> List[Tuple[int, int, int, int]]:
+    """(y, x, pw_h, pw_w) for every window load of a tile: the regular
+    floor-grid, then Alg 4 marginal windows (or, for ceil-form baselines,
+    border-clamped overhang windows)."""
+    s = layer.stride
+    w, k_w, k_h = tile.window, layer.k_w, layer.k_h
+    step_x = ((w.pw_w - k_w) // s + 1) * s
+    step_y = ((w.pw_h - k_h) // s + 1) * s
+
+    n_x = (layer.i_w - w.pw_w) // step_x + 1
+    n_y = (layer.i_h - w.pw_h) // step_y + 1
+    ceil_x = math.ceil(((layer.i_w - k_w) // s + 1) / (step_x // s))
+    ceil_y = math.ceil(((layer.i_h - k_h) // s + 1) / (step_y // s))
+
+    # border clamps must stay on the stride grid so in-window kernel
+    # positions align with the global output raster
+    def clamp(v: int, limit: int) -> int:
+        return min(v, (limit // s) * s)
+
+    out: List[Tuple[int, int, int, int]] = []
+    use_ceil = not tile.marginals
+    nx, ny = (ceil_x, ceil_y) if use_ceil else (n_x, n_y)
+    for iy in range(ny):
+        for ix in range(nx):
+            y = clamp(iy * step_y, layer.i_h - w.pw_h)
+            x = clamp(ix * step_x, layer.i_w - w.pw_w)
+            out.append((y, x, w.pw_h, w.pw_w))
+
+    for mw in tile.marginals:
+        if mw.edge == "w":          # right strip
+            x = clamp(layer.i_w - mw.mw_w, layer.i_w - mw.mw_w)
+            step = ((mw.mw_h - k_h) // s + 1) * s
+            for i in range(mw.count):
+                y = clamp(i * step, layer.i_h - mw.mw_h)
+                out.append((y, x, mw.mw_h, mw.mw_w))
+        else:                        # bottom strip
+            y = clamp(layer.i_h - mw.mw_h, layer.i_h - mw.mw_h)
+            step = ((mw.mw_w - k_w) // s + 1) * s
+            for i in range(mw.count):
+                x = clamp(i * step, layer.i_w - mw.mw_w)
+                out.append((y, x, mw.mw_h, mw.mw_w))
+    return out
+
+
+def build_weight_matrix(layer: ConvLayerSpec, kernel: jnp.ndarray,
+                        pw_h: int, pw_w: int) -> jnp.ndarray:
+    """Shifted-and-duplicated kernel matrix for one window shape (Fig 5).
+
+    kernel: (k_h, k_w, ic_t, oc_t) slice ->
+    matrix: (ic_t * pw_h * pw_w, n_pos * oc_t); rows are channel-major
+    window pixels, columns enumerate (position, oc).
+    """
+    s = layer.stride
+    k_h, k_w = layer.k_h, layer.k_w
+    ic_t, oc_t = kernel.shape[2], kernel.shape[3]
+    py = (pw_h - k_h) // s + 1
+    px = (pw_w - k_w) // s + 1
+    W = jnp.zeros((ic_t, pw_h, pw_w, py * px, oc_t), kernel.dtype)
+    kt = jnp.transpose(kernel, (2, 0, 1, 3))   # (ic_t, k_h, k_w, oc_t)
+    for iy in range(py):
+        for ix in range(px):
+            p = iy * px + ix
+            W = W.at[:, iy * s:iy * s + k_h, ix * s:ix * s + k_w, p, :].add(kt)
+    return W.reshape(ic_t * pw_h * pw_w, py * px * oc_t)
+
+
+def cim_conv2d(mapping: LayerMapping, x: jnp.ndarray,
+               kernel: jnp.ndarray) -> jnp.ndarray:
+    """Convolve per the mapping.
+
+    x: (batch, ic, i_h, i_w) pre-padded; kernel in lax grouped layout
+    (k_h, k_w, ic // G, oc) with G = mapping.group (for G=1 that is the
+    ordinary dense HWIO kernel).  Returns (batch, oc, o_h, o_w).  Pruned
+    channels (depth-optimal tiles) are skipped — callers comparing against
+    an exact conv must zero the corresponding kernel slices (see tests).
+    """
+    layer = mapping.layer
+    s = layer.stride
+    b = x.shape[0]
+    o_h, o_w = layer.o_h, layer.o_w
+    out = jnp.zeros((b, layer.oc, o_h, o_w), jnp.result_type(x, kernel))
+
+    g = mapping.group
+    ic_g, oc_g = layer.ic // g, layer.oc // g
+
+    if kernel.shape != (layer.k_h, layer.k_w, ic_g, layer.oc):
+        raise ValueError(f"kernel shape {kernel.shape} != grouped layout "
+                         f"{(layer.k_h, layer.k_w, ic_g, layer.oc)}")
+
+    for gi in range(g):
+        xg = x[:, gi * ic_g:(gi + 1) * ic_g]
+        kg = kernel[:, :, :, gi * oc_g:(gi + 1) * oc_g]
+        c_base = 0
+        for tile in mapping.tiles:
+            kept = tile.depth        # TileMapping.depth is the KEPT channels
+            placements = window_placements(layer, tile)
+            for c0 in range(c_base, c_base + kept, tile.ic_t):
+                ic_t = min(tile.ic_t, c_base + kept - c0)
+                for o0 in range(0, oc_g, tile.oc_t):
+                    oc_t = min(tile.oc_t, oc_g - o0)
+                    # one channel x oc pass: set-semantics buffer
+                    buf = jnp.zeros((b, oc_t, o_h, o_w), out.dtype)
+                    for (y, x0, pw_h, pw_w) in placements:
+                        Wm = build_weight_matrix(
+                            layer, kg[:, :, c0:c0 + ic_t, o0:o0 + oc_t],
+                            pw_h, pw_w)
+                        patch = jax.lax.dynamic_slice(
+                            xg, (0, c0, y, x0), (b, ic_t, pw_h, pw_w))
+                        flat = patch.reshape(b, ic_t * pw_h * pw_w)
+                        prod = flat @ Wm              # (b, n_pos*oc_t)
+                        py = (pw_h - layer.k_h) // s + 1
+                        px = (pw_w - layer.k_w) // s + 1
+                        prod = prod.reshape(b, py, px, oc_t)
+                        prod = jnp.transpose(prod, (0, 3, 1, 2))
+                        buf = jax.lax.dynamic_update_slice(
+                            buf, prod, (0, 0, y // s, x0 // s))
+                    out = out.at[:, gi * oc_g + o0:gi * oc_g + o0 + oc_t
+                                 ].add(buf)
+            c_base += tile.depth
+    return out
+
+
+def reference_conv2d(layer: ConvLayerSpec, x: jnp.ndarray,
+                     kernel: jnp.ndarray, groups: int = 1) -> jnp.ndarray:
+    """Oracle: lax.conv_general_dilated on the (pre-padded) input; kernel
+    in the same grouped layout cim_conv2d consumes."""
+    return jax.lax.conv_general_dilated(
+        x, kernel, window_strides=(layer.stride, layer.stride),
+        padding="VALID",
+        dimension_numbers=("NCHW", "HWIO", "NCHW"),
+        feature_group_count=groups)

@@ -1,0 +1,115 @@
+"""Benchmark CNNs in pure JAX (param-pytree modules, NCHW).
+
+The builder consumes the same ``ConvLayerSpec`` stacks the mapping layer
+uses, so the *trained* network and the *mapped* network are structurally
+identical.  ``group`` applies TetrisG grouped convolutions (Alg 1
+training side): every conv's kernel becomes the lax grouped layout
+``(k, k, ic/G, oc)``.
+
+Forward paths:
+  * ``apply(params, x)``                  — lax.conv fast path
+  * ``apply(params, x, mappings=...)``    — conv executed through
+    cim_conv2d per the given LayerMappings (slow; used to demonstrate the
+    mapped network computes the same logits).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ConvLayerSpec, LayerMapping
+from .cim_conv import cim_conv2d, reference_conv2d
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    convs: Tuple[ConvLayerSpec, ...]      # padded specs, in order
+    num_classes: int = 10
+    group: int = 1                        # TetrisG grouping (1 = off)
+    pool_after: Tuple[int, ...] = ()      # conv indices followed by 2x2 pool
+
+    def grouped(self, g: int) -> "CNNConfig":
+        for c in self.convs:
+            if c.ic % g or c.oc % g:
+                raise ValueError(f"{c.name} not divisible by G={g}")
+        return CNNConfig(self.name + f"-g{g}", self.convs, self.num_classes,
+                         g, self.pool_after)
+
+
+def cnn8_config(in_size: int = 16, in_ch: int = 8, group: int = 1
+                ) -> CNNConfig:
+    """CNN8-shaped stack scaled to a trainable-on-CPU geometry: same
+    channel progression as the paper's CNN8 (24-32-32-64-64-64-256 after
+    the stem), 3x3 convs + one 5x5 head conv."""
+    s = in_size + 2
+    convs = (
+        ConvLayerSpec("c1", s, s, 3, 3, in_ch, 24),
+        ConvLayerSpec("c2", s, s, 3, 3, 24, 32),
+        ConvLayerSpec("c3", s, s, 3, 3, 32, 32),
+        ConvLayerSpec("c4", s // 2 + 1, s // 2 + 1, 3, 3, 32, 64),
+        ConvLayerSpec("c5", s // 2 + 1, s // 2 + 1, 3, 3, 64, 64),
+    )
+    return CNNConfig("cnn8", convs, group=group, pool_after=(2,))
+
+
+def init_cnn(rng: jax.Array, cfg: CNNConfig) -> Dict:
+    params: Dict = {"convs": []}
+    g = cfg.group
+    keys = jax.random.split(rng, len(cfg.convs) + 1)
+    for i, c in enumerate(cfg.convs):
+        fan_in = c.k_h * c.k_w * c.ic // g
+        w = jax.random.normal(keys[i], (c.k_h, c.k_w, c.ic // g, c.oc),
+                              jnp.float32) * math.sqrt(2.0 / fan_in)
+        params["convs"].append({"w": w, "b": jnp.zeros((c.oc,))})
+    # head dims resolved lazily at first apply via shape; store factory seed
+    params["head"] = None
+    params["_head_key"] = keys[-1]
+    return params
+
+
+def _pad(x: jnp.ndarray, target: int) -> jnp.ndarray:
+    pad = target - x.shape[-1]
+    lo, hi = pad // 2, pad - pad // 2
+    return jnp.pad(x, ((0, 0), (0, 0), (lo, hi), (lo, hi)))
+
+
+def apply_cnn(params: Dict, cfg: CNNConfig, x: jnp.ndarray,
+              mappings: Optional[Sequence[LayerMapping]] = None
+              ) -> jnp.ndarray:
+    """x: (b, in_ch, H, W) -> logits (b, num_classes)."""
+    g = cfg.group
+    for i, c in enumerate(cfg.convs):
+        x = _pad(x, c.i_w)
+        w, b = params["convs"][i]["w"], params["convs"][i]["b"]
+        if mappings is not None:
+            y = cim_conv2d(mappings[i], x, w)
+        else:
+            y = reference_conv2d(c, x, w, groups=g)
+        x = jax.nn.relu(y + b[None, :, None, None])
+        if i in cfg.pool_after:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2),
+                "VALID")
+    feats = x.mean(axis=(2, 3))                       # GAP
+    head = params["head"]
+    if head is None:
+        raise ValueError("call ensure_head(params, cfg, in_ch) first")
+    return feats @ head["w"] + head["b"]
+
+
+def ensure_head(params: Dict, cfg: CNNConfig) -> Dict:
+    if params["head"] is None:
+        d = cfg.convs[-1].oc
+        k = params.pop("_head_key")
+        params["head"] = {
+            "w": jax.random.normal(k, (d, cfg.num_classes), jnp.float32)
+            * math.sqrt(1.0 / d),
+            "b": jnp.zeros((cfg.num_classes,)),
+        }
+    params.pop("_head_key", None)
+    return params

@@ -1,0 +1,82 @@
+"""Grouped-convolution training study (Table II proxy).
+
+MNIST/CIFAR/TinyImageNet are not available offline; the claim under test —
+"grouped convolutions are near-lossless (and sometimes better)" — is
+checked on a seeded synthetic image-classification task
+(:mod:`repro.data.synthetic`).  We train the CNN8-shaped stack with
+G in {1, 2, 4} under identical budgets and report accuracy deltas next to
+the mapping cycle counts (benchmarks/table2_grouped.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import image_task
+from .models import CNNConfig, apply_cnn, cnn8_config, ensure_head, init_cnn
+
+
+@dataclass
+class TrainResult:
+    config: str
+    group: int
+    steps: int
+    final_loss: float
+    train_acc: float
+    test_acc: float
+
+
+def loss_fn(params, cfg: CNNConfig, x, y):
+    logits = apply_cnn(params, cfg, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+
+def train_cnn(cfg: CNNConfig, *, steps: int = 300, batch: int = 64,
+              lr: float = 3e-3, seed: int = 0,
+              n_train: int = 2048, n_test: int = 512) -> TrainResult:
+    rng = jax.random.PRNGKey(seed)
+    k_init, k_data = jax.random.split(rng)
+    xs, ys, xt, yt = image_task(k_data, n_train=n_train, n_test=n_test,
+                                size=cfg.convs[0].i_w - 2,
+                                channels=cfg.convs[0].ic,
+                                num_classes=cfg.num_classes)
+    params = ensure_head(init_cnn(k_init, cfg), cfg)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        l, grads = jax.value_and_grad(loss_fn)(params, cfg, x, y)
+        # Adam
+        m = jax.tree.map(lambda m_, g: 0.9 * m_ + 0.1 * g, opt["m"], grads)
+        v = jax.tree.map(lambda v_, g: 0.999 * v_ + 0.001 * g * g,
+                         opt["v"], grads)
+        t = opt["t"] + 1
+        def upd(p, m_, v_):
+            mh = m_ / (1 - 0.9 ** t)
+            vh = v_ / (1 - 0.999 ** t)
+            return p - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        params = jax.tree.map(upd, params, m, v)
+        return params, {"m": m, "v": v, "t": t}, l
+
+    opt = {"m": jax.tree.map(jnp.zeros_like, params),
+           "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+    n = xs.shape[0]
+    loss = float("nan")
+    for i in range(steps):
+        lo = (i * batch) % max(1, n - batch)
+        params, opt, loss = step(params, opt, xs[lo:lo + batch],
+                                 ys[lo:lo + batch])
+
+    @jax.jit
+    def acc(params, x, y):
+        return (apply_cnn(params, cfg, x).argmax(-1) == y).mean()
+
+    return TrainResult(
+        config=cfg.name, group=cfg.group, steps=steps,
+        final_loss=float(loss),
+        train_acc=float(acc(params, xs[:n_test], ys[:n_test])),
+        test_acc=float(acc(params, xt, yt)))

@@ -1,0 +1,35 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own
+CNN benchmarks).  ``get_config(arch_id)`` returns the full ArchConfig;
+``get_config(arch_id, smoke=True)`` the reduced same-family config used by
+CPU smoke tests."""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = (
+    "internvl2_26b",
+    "deepseek_67b",
+    "mistral_large_123b",
+    "stablelm_1_6b",
+    "qwen1_5_32b",
+    "whisper_base",
+    "recurrentgemma_9b",
+    "deepseek_v2_lite_16b",
+    "mixtral_8x7b",
+    "mamba2_130m",
+)
+
+CNN_IDS = ("cnn8", "inception", "densenet40", "mobilenet")
+
+
+def canon(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str, smoke: bool = False):
+    mod = importlib.import_module(f"repro.configs.{canon(arch)}")
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def all_configs(smoke: bool = False):
+    return {a: get_config(a, smoke) for a in ARCH_IDS}

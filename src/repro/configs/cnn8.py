@@ -1,0 +1,5 @@
+"""Paper benchmark: CNN8 conv stack (Table I) + default 512x512 macro."""
+from repro.core import ArrayConfig, networks
+
+def config():
+    return {"layers": networks.cnn8(), "array": ArrayConfig(512, 512)}

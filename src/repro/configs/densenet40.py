@@ -1,0 +1,5 @@
+"""Paper benchmark: DenseNet-40 (k=12) conv stack."""
+from repro.core import ArrayConfig, networks
+
+def config():
+    return {"layers": networks.densenet40(), "array": ArrayConfig(512, 512)}

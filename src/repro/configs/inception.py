@@ -1,0 +1,5 @@
+"""Paper benchmark: GoogLeNet Inception 5x5 branches (Table I)."""
+from repro.core import ArrayConfig, networks
+
+def config():
+    return {"layers": networks.inception(), "array": ArrayConfig(512, 512)}

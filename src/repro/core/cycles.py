@@ -1,0 +1,121 @@
+"""Window-count arithmetic (Eq 7) and marginal windows (Alg 4).
+
+Two counting conventions exist in the SDK literature and both appear in the
+paper:
+
+* **ceil form** (VW/VWC-SDK): ``ceil((I - K + 1) / (PW - K + 1))`` per axis —
+  the last window overhangs the border and the overhang rows are *null
+  inputs* (wasted array area but correct coverage).
+* **floor form + marginal windows** (Tetris/TetrisG-SDK):
+  ``floor((I - PW) / (PW - K + 1)) + 1`` regular windows, plus dedicated
+  border windows from Alg 4 when the leftover is nonzero.
+
+Verified against the paper: VW-SDK/CNN8/512x512 => 128 total cycles and
+Tetris-SDK => 116 (Table I); CNN8-3 => 48 vs 38 (Fig 12).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Tuple
+
+from .types import (ArrayConfig, ConvLayerSpec, MarginalWindow, Window)
+
+
+def axis_windows_ceil(i: int, pw: int, k: int, stride: int = 1) -> int:
+    """VW-SDK convention: over-cover the border with null inputs."""
+    out = (i - k) // stride + 1                 # output positions along axis
+    per_window = (pw - k) // stride + 1         # outputs one window yields
+    return math.ceil(out / per_window)
+
+
+def axis_windows_floor(i: int, pw: int, k: int, stride: int = 1) -> int:
+    """Tetris convention: only fully-inside windows (Eq 7 floor form)."""
+    per_window = (pw - k) // stride + 1
+    return (i - pw) // (stride * per_window) + 1
+
+
+def axis_leftover(i: int, pw: int, k: int, stride: int = 1) -> int:
+    """Input pixels at the border not covered by floor-form windows
+    (Alg 4 lines 1-2: ``(I - PW) % (PW - K + 1)`` for stride 1)."""
+    per_window = (pw - k) // stride + 1
+    return (i - pw) % (stride * per_window)
+
+
+def ic_t_for(window: Window, depth_cap: int, array: ArrayConfig) -> int:
+    """Channels mappable per array load: floor(AR / (PW_w*PW_h)), Alg 1 l.7."""
+    per_ch_rows = window.pw_w * window.pw_h
+    return min(depth_cap, array.ar // per_ch_rows)
+
+
+def oc_t_for(window: Window, layer: ConvLayerSpec, array: ArrayConfig,
+             oc_cap: Optional[int] = None) -> int:
+    """Output channels per load: floor(AC / (positions * cols_per_weight)),
+    Alg 1 l.8."""
+    pos = window.positions(layer.k_w, layer.k_h, layer.stride)
+    oc = layer.oc if oc_cap is None else oc_cap
+    return min(oc, array.ac // (pos * array.cols_per_weight))
+
+
+def marginal_windows(layer: ConvLayerSpec, base: Window,
+                     array: ArrayConfig) -> Tuple[MarginalWindow, ...]:
+    """Alg 4: dedicated border windows when the IFM is not evenly covered.
+
+    The marginal window keeps roughly the base window's area (so the tile's
+    ``ic_t`` still fits) but is reshaped to the leftover strip:
+    ``MW_w = leftover + K - 1`` and ``MW_h = area // MW_w`` (capped at the
+    IFM).  Its count covers the strip's output rows:
+    ``ceil((I - K + 1) / (MW_h - K + 1))`` (equals Alg 4's ``ceil(I / MW_h)``
+    on all the paper's worked examples, but is coverage-exact in general).
+    """
+    s = layer.stride
+    area = base.pw_w * base.pw_h
+    out: List[MarginalWindow] = []
+
+    lo_w = axis_leftover(layer.i_w, base.pw_w, layer.k_w, s)
+    if lo_w:
+        mw_w = lo_w + layer.k_w - s
+        mw_h = min(layer.i_h, max(layer.k_h, area // mw_w))
+        per = (mw_h - layer.k_h) // s + 1
+        count = math.ceil(((layer.i_h - layer.k_h) // s + 1) / per)
+        out.append(MarginalWindow(mw_w=mw_w, mw_h=mw_h, count=count, edge="w"))
+
+    lo_h = axis_leftover(layer.i_h, base.pw_h, layer.k_h, s)
+    if lo_h:
+        mw_h = lo_h + layer.k_h - s
+        mw_w = min(layer.i_w, max(layer.k_w, area // mw_h))
+        per = (mw_w - layer.k_w) // s + 1
+        count = math.ceil(((layer.i_w - layer.k_w) // s + 1) / per)
+        out.append(MarginalWindow(mw_w=mw_w, mw_h=mw_h, count=count, edge="h"))
+
+    return tuple(out)
+
+
+def n_windows(layer: ConvLayerSpec, window: Window, *,
+              marginal: bool) -> Tuple[int, Tuple[MarginalWindow, ...]]:
+    """(regular windows, marginal windows) for one window shape.
+
+    ``marginal=False`` => VW-SDK ceil convention, no marginal set.
+    ``marginal=True``  => Tetris floor convention + Alg 4 marginal set.
+    """
+    s = layer.stride
+    if not marginal:
+        nw = (axis_windows_ceil(layer.i_w, window.pw_w, layer.k_w, s)
+              * axis_windows_ceil(layer.i_h, window.pw_h, layer.k_h, s))
+        return nw, ()
+    nw = (axis_windows_floor(layer.i_w, window.pw_w, layer.k_w, s)
+          * axis_windows_floor(layer.i_h, window.pw_h, layer.k_h, s))
+    return nw, marginal_windows(layer, window, ArrayConfig())
+
+
+def candidate_windows(layer: ConvLayerSpec, array: ArrayConfig):
+    """All feasible (window) shapes: at least one channel and one output
+    channel must fit (AR constraint Eq 10, AC constraint Eq 11)."""
+    for pw_w in range(layer.k_w, layer.i_w + 1):
+        for pw_h in range(layer.k_h, layer.i_h + 1):
+            w = Window(pw_w, pw_h)
+            if w.rows(1) > array.ar:
+                continue
+            pos = w.positions(layer.k_w, layer.k_h, layer.stride)
+            if pos * array.cols_per_weight > array.ac:
+                continue
+            yield w

@@ -1,0 +1,64 @@
+"""Top-level mapping API: algorithm dispatch + depthwise/native-group
+handling + network mapping.
+
+``map_layer(layer, array, algorithm=..., grid=...)`` is the single entry
+point used by benchmarks, the CIM simulator and the JAX executors.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, Iterable, Optional, Sequence
+
+from . import baselines, grouped, tetris
+from .macro_grid import GridSearchResult, macro_grid_search, map_network
+from .types import (ArrayConfig, ConvLayerSpec, LayerMapping, MacroGrid,
+                    NetworkMapping)
+
+ALGORITHMS = ("img2col", "SDK", "VW-SDK", "VWC-SDK", "Tetris-SDK",
+              "TetrisG-SDK")
+
+
+def _dispatch(algorithm: str) -> Callable[..., LayerMapping]:
+    return {
+        "img2col": baselines.img2col,
+        "SDK": baselines.sdk,
+        "VW-SDK": baselines.vw_sdk,
+        "VWC-SDK": baselines.vwc_sdk,
+        "Tetris-SDK": tetris.tetris_layer,
+        "TetrisG-SDK": grouped.tetrisg_layer,
+    }[algorithm]
+
+
+def map_layer(layer: ConvLayerSpec, array: ArrayConfig,
+              algorithm: str = "TetrisG-SDK",
+              grid: MacroGrid = MacroGrid(), **kw) -> LayerMapping:
+    """Map one conv layer.  Layers with native groups (depthwise etc.) are
+    mapped per native group and the native-group loop folds into the
+    `group` multiplier — the paper's MobileNet observation (depthwise
+    leaves no cross-channel reuse) falls out of this accounting."""
+    if layer.groups > 1:
+        sub = layer.per_group(layer.groups)
+        m = _dispatch(algorithm)(sub, array, grid, **kw)
+        return LayerMapping(layer=layer, array=array, algorithm=m.algorithm,
+                            tiles=m.tiles, grid=grid,
+                            group=layer.groups * m.group,
+                            group_split=grouped.best_group_split(
+                                m, layer.groups * m.group, grid))
+    return _dispatch(algorithm)(layer, array, grid, **kw)
+
+
+def map_net(name: str, layers: Sequence[ConvLayerSpec], array: ArrayConfig,
+            algorithm: str = "TetrisG-SDK",
+            grid: MacroGrid = MacroGrid(), **kw) -> NetworkMapping:
+    mapped = tuple(map_layer(l, array, algorithm, grid, **kw) for l in layers)
+    return NetworkMapping(name=name, algorithm=algorithm, array=array,
+                          layers=mapped, grid=grid)
+
+
+def grid_search(name: str, layers: Sequence[ConvLayerSpec],
+                array: ArrayConfig, p_max: int,
+                algorithm: str = "TetrisG-SDK", **kw) -> GridSearchResult:
+    """Alg 2 entry point."""
+    def mapper(l, a, g, **kwargs):
+        return map_layer(l, a, algorithm, g, **kwargs)
+    return macro_grid_search(name, layers, array, mapper, p_max, **kw)

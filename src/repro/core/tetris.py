@@ -1,0 +1,171 @@
+"""Tetris-SDK adaptive-window search (paper §III D-F, Algs 3-5).
+
+Structure of the per-layer search (validated against the paper's worked
+examples — CNN8 totals 116, CNN8-3 = 38, CNN8-5 tiles 24+24+16):
+
+1. enumerate base parallel windows (square-inclined shapes rank first,
+   Alg 3 — for a fixed number of in-window convolutions, a near-square
+   output footprint minimises input rows, AM-GM);
+2. the base window defines `ic_t`; channels split into ``ic // ic_t`` full
+   tiles + one remainder tile;
+3. the remainder tile gets its own *depth-optimal* window (Alg 5), allowed
+   to prune up to ``max_prune`` channels when that unlocks a strictly
+   better factorisation (paper prunes 1 channel in CNN8-3);
+4. every tile uses floor-form window counts plus *marginal windows*
+   (Alg 4, implemented in cycles.marginal_windows);
+5. keep the base window minimising total layer cycles.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import List, Optional, Tuple
+
+from . import cycles as cyc
+from .types import (ArrayConfig, ConvLayerSpec, LayerMapping, MacroGrid,
+                    TileMapping, Window)
+
+
+def factor_pairs_square_first(n: int) -> List[Tuple[int, int]]:
+    """Factor pairs (a, b) of n ordered square-inclined first (Alg 3 l.4:
+    'factorize N_conv using square-root')."""
+    pairs = []
+    for a in range(int(math.isqrt(n)), 0, -1):
+        if n % a == 0:
+            b = n // a
+            pairs.append((a, b))
+            if a != b:
+                pairs.append((b, a))
+    return pairs
+
+
+def square_inclined(layer: ConvLayerSpec, array: ArrayConfig,
+                    window: Window) -> Window:
+    """Alg 3: replace `window` by the most square window computing the same
+    number of convolutions, if it needs no more rows (=> ic_t can only
+    grow).  The exhaustive search in :func:`tetris_layer` subsumes this,
+    but the faithful refinement is exposed (and unit-tested) on its own."""
+    n_conv = window.positions(layer.k_w, layer.k_h, layer.stride)
+    s = layer.stride
+    best = window
+    for a, b in factor_pairs_square_first(n_conv):
+        cand = Window((a - 1) * s + layer.k_w, (b - 1) * s + layer.k_h)
+        if cand.pw_w > layer.i_w or cand.pw_h > layer.i_h:
+            continue
+        if cand.rows(1) <= best.rows(1):  # fewer rows per channel
+            if cand.rows(1) < best.rows(1) or cand is window:
+                best = cand
+    return best
+
+
+def _mk_tile(layer: ConvLayerSpec, array: ArrayConfig, window: Window,
+             depth: int, pruned: int = 0) -> Optional[TileMapping]:
+    ic_t = cyc.ic_t_for(window, depth, array)
+    if ic_t < 1:
+        return None
+    oc_t = cyc.oc_t_for(window, layer, array)
+    if oc_t < 1:
+        return None
+    n_reg, margs = cyc.n_windows(layer, window, marginal=True)
+    return TileMapping(window=window, depth=depth, ic_t=ic_t, oc_t=oc_t,
+                       ar_c=math.ceil(depth / ic_t),
+                       ac_c=math.ceil(layer.oc / oc_t),
+                       n_regular=n_reg, marginals=margs,
+                       pruned_channels=pruned)
+
+
+@functools.lru_cache(maxsize=65536)
+def depth_optimal_tile(layer: ConvLayerSpec, array: ArrayConfig,
+                       depth: int, max_prune: int = 1
+                       ) -> Optional[TileMapping]:
+    """Alg 5: best window for a remainder tile of `depth` channels, pruning
+    up to `max_prune` channels when it strictly reduces cycles.
+
+    Rather than only scanning factor pairs of ``Max_conv = AC // OC`` (the
+    paper's inner loop, which assumes OC <= AC), we exhaustively score every
+    feasible window whose full `depth` fits in one load — this subsumes the
+    paper's loop and reproduces its examples (CNN8-3: 6x6 @ 14ch after
+    pruning 1; CNN8-5: 6x4 @ 16ch, no pruning).
+    """
+    best: Optional[TileMapping] = None
+
+    def better(t: Optional[TileMapping], ref: Optional[TileMapping]) -> bool:
+        if t is None:
+            return False
+        if ref is None:
+            return True
+        a = (t.n_windows * t.ar_c * t.ac_c, t.pruned_channels,
+             -t.ic_t * t.window.rows(1))
+        b = (ref.n_windows * ref.ar_c * ref.ac_c, ref.pruned_channels,
+             -ref.ic_t * ref.window.rows(1))
+        return a < b
+
+    for prune in range(0, max_prune + 1):
+        d = depth - prune
+        if d < 1:
+            break
+        for w in cyc.candidate_windows(layer, array):
+            if w.rows(d) > array.ar:
+                continue  # the whole remainder must fit one load
+            t = _mk_tile(layer, array, w, d, pruned=prune)
+            if t is not None and better(t, best):
+                best = t
+        if best is not None and best.pruned_channels == prune and prune == 0:
+            # only consider pruning if it can strictly beat the best;
+            # continue the loop — `better` already demands strict gain.
+            pass
+    return best
+
+
+def tetris_layer(layer: ConvLayerSpec, array: ArrayConfig,
+                 grid: MacroGrid = MacroGrid(), *,
+                 max_prune: int = 1,
+                 algorithm: str = "Tetris-SDK") -> LayerMapping:
+    """Full Tetris-SDK search for one layer (one group's dims).
+
+    The VW-SDK solution (ceil windows, no marginal set) is included as a
+    candidate, so Tetris is never worse than VW-SDK — on rare geometries
+    the floor+marginal decomposition alone can lose to a single
+    border-overhanging window (found by the hypothesis suite)."""
+    from . import baselines
+    vw = baselines.vw_sdk(layer, array, grid)
+    best: Optional[LayerMapping] = LayerMapping(
+        layer=layer, array=array, algorithm=algorithm, tiles=vw.tiles,
+        grid=grid)
+    for w in cyc.candidate_windows(layer, array):
+        ic_t = cyc.ic_t_for(w, layer.ic, array)
+        if ic_t < 1:
+            continue
+        oc_t = cyc.oc_t_for(w, layer, array)
+        if oc_t < 1:
+            continue
+        n_full, rem = divmod(layer.ic, ic_t)
+        tiles: List[TileMapping] = []
+        if n_full:
+            t = _mk_tile(layer, array, w, ic_t)
+            if t is None:
+                continue
+            # n_full congruent tiles: represent once with ar_c = n_full
+            tiles.append(TileMapping(
+                window=t.window, depth=n_full * ic_t, ic_t=ic_t, oc_t=t.oc_t,
+                ar_c=n_full, ac_c=t.ac_c, n_regular=t.n_regular,
+                marginals=t.marginals))
+        if rem:
+            rt = depth_optimal_tile(layer, array, rem, max_prune=max_prune)
+            if rt is None:
+                # fall back: remainder under the base window (multi-load)
+                rt = _mk_tile(layer, array, w, rem)
+            if rt is None:
+                continue
+            tiles.append(rt)
+        if not tiles:
+            continue
+        m = LayerMapping(layer=layer, array=array, algorithm=algorithm,
+                         tiles=tuple(tiles), grid=grid)
+        key = (m.cycles, m.pruned_channels, -m.utilization)
+        if best is None or key < (best.cycles, best.pruned_channels,
+                                  -best.utilization):
+            best = m
+    if best is None:
+        raise ValueError(f"{layer.name}: no feasible Tetris window")
+    return best

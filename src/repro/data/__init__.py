@@ -1,0 +1,2 @@
+from .synthetic import image_task, TokenStream
+from .pipeline import ShardedDataPipeline

@@ -1,0 +1,87 @@
+"""Seeded synthetic datasets (offline substitute for MNIST/CIFAR/C4).
+
+* :func:`image_task` — K-class image classification: class prototypes in
+  a random low-frequency basis + per-sample noise; learnable but not
+  trivial (class separation controls difficulty).
+* :class:`TokenStream` — deterministic LM token stream: a mixture of
+  order-2 Markov chains (one transition table per "document topic"), so a
+  model must learn context-dependent statistics; fully determined by
+  (seed, step, shard) — restart-exact for checkpoint/resume tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def image_task(key: jax.Array, *, n_train: int, n_test: int, size: int,
+               channels: int, num_classes: int,
+               noise: float = 0.6) -> Tuple[jnp.ndarray, ...]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    protos = jax.random.normal(k1, (num_classes, channels, size, size))
+    # low-pass the prototypes for spatial structure
+    kernel = jnp.ones((1, 1, 3, 3)) / 9.0
+    protos = jax.lax.conv_general_dilated(
+        protos, jnp.tile(kernel, (channels, 1, 1, 1)),
+        (1, 1), "SAME", feature_group_count=channels,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+    def make(k, n):
+        ky, kn = jax.random.split(k)
+        y = jax.random.randint(ky, (n,), 0, num_classes)
+        x = protos[y] + noise * jax.random.normal(
+            kn, (n, channels, size, size))
+        return x, y
+
+    xs, ys = make(k3, n_train)
+    xt, yt = make(k4, n_test)
+    return xs, ys, xt, yt
+
+
+@dataclass
+class TokenStream:
+    """Deterministic order-2 Markov LM stream.
+
+    ``batch_at(step, shard, n_shards)`` returns the (local_batch, seq+1)
+    token block for that step/shard — pure function of (seed, step,
+    shard), which is what makes restart-exact data skipping trivial
+    (runtime/recovery.py just replays the step counter).
+    """
+
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_topics: int = 8
+    _tables: np.ndarray = None  # lazily built (n_topics, V, V) cumulative
+
+    def __post_init__(self):
+        rs = np.random.RandomState(self.seed)
+        v = min(self.vocab, 512)      # dense tables over a head vocabulary
+        raw = rs.dirichlet(np.ones(v) * 0.05, size=(self.n_topics, v))
+        self._tables = np.cumsum(raw, axis=-1)
+        self._head_vocab = v
+
+    def batch_at(self, step: int, shard: int = 0, n_shards: int = 1
+                 ) -> np.ndarray:
+        if self.global_batch % n_shards:
+            raise ValueError("global_batch must divide by n_shards")
+        local = self.global_batch // n_shards
+        rs = np.random.RandomState(
+            (self.seed * 1_000_003 + step * 977 + shard) % (2 ** 31 - 1))
+        topics = rs.randint(0, self.n_topics, size=local)
+        u = rs.random_sample((local, self.seq_len + 1))
+        tabs = self._tables[topics]               # (local, v, v)
+        tok = rs.randint(0, self._head_vocab, size=local)
+        out = np.empty((local, self.seq_len + 1), np.int32)
+        idx = np.arange(local)
+        for i in range(self.seq_len + 1):         # sequential in time only
+            rows = tabs[idx, tok]                 # (local, v) cumulative
+            tok = np.minimum((rows < u[:, i:i + 1]).sum(-1),
+                             self._head_vocab - 1)
+            out[:, i] = tok
+        return out

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute hot-spots (validated in interpret
+# mode on CPU; see EXAMPLE.md convention):
+#   tetris_matmul.py  - square-inclined blocked matmul (Alg 3 on the MXU)
+#   grouped_matmul.py - block-diagonal grouped/expert matmul (SIII-B)
+#   im2win_conv.py    - SDK parallel-window convolution (grid = cycles)
+#   ops.py            - jit'd wrappers; ref.py - pure-jnp oracles
+from . import ops, ref

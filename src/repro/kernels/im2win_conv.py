@@ -1,0 +1,94 @@
+"""im2win convolution — the paper's SDK parallel window executed as a
+Pallas kernel (DESIGN.md §2 table).
+
+One grid step == one parallel-window load == one computing cycle: the
+grid size IS the paper's cycle count for the layer.  Each step covers a
+(th x tw) tile of output positions (the 'kernel computations inside the
+parallel window', Fig 9a) against the full kernel stack, computed as
+k_h*k_w shift-matmuls on the MXU — the shifted-and-duplicated kernel
+matrix of Fig 5 realised as shifted *reads* instead of duplicated
+*weights* (VMEM holds one kernel copy; the crossbar had to duplicate).
+
+The window tile (th, tw) should come from the square-inclined rule
+(Alg 3): for fixed th*tw outputs the input patch (th+K-1)(tw+K-1) is
+minimal at th==tw.  Border windows are clamped (overlap-recompute), the
+marginal-window analogue; the step count matches the ceil form.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.tetris import factor_pairs_square_first
+
+
+def select_window(o_h: int, o_w: int, k: int, c: int, oc: int,
+                  vmem_budget: int = 4 * 1024 * 1024,
+                  dtype_bytes: int = 4) -> Tuple[int, int]:
+    """Square-inclined (th, tw) output tile per window (Alg 3 on TPU)."""
+    best = (min(o_h, 8), min(o_w, 8))
+    for target in (4096, 1024, 256, 64, 16, 4):
+        for a, b in factor_pairs_square_first(target):
+            th, tw = min(a, o_h), min(b, o_w)
+            patch = (th + k - 1) * (tw + k - 1) * c
+            ws = (patch + th * tw * oc) * dtype_bytes + k * k * c * oc \
+                * dtype_bytes
+            if ws <= vmem_budget:
+                return th, tw
+    return best
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, k_h, k_w, th, tw, o_h, o_w):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    y0 = jnp.minimum(i * th, o_h - th)
+    x0 = jnp.minimum(j * tw, o_w - tw)
+    win = pl.load(x_ref, (0, pl.ds(y0, th + k_h - 1),
+                          pl.ds(x0, tw + k_w - 1), slice(None)))
+    c = win.shape[-1]
+    oc = w_ref.shape[-1]
+    acc = jnp.zeros((th * tw, oc), jnp.float32)
+    for dy in range(k_h):            # unrolled shift-matmuls (MXU passes)
+        for dx in range(k_w):
+            patch = win[dy:dy + th, dx:dx + tw, :].reshape(th * tw, c)
+            acc += jnp.dot(patch, w_ref[dy, dx],
+                           preferred_element_type=jnp.float32)
+    pl.store(o_ref, (0, pl.ds(y0, th), pl.ds(x0, tw), slice(None)),
+             acc.reshape(th, tw, oc).astype(o_ref.dtype))
+
+
+def im2win_conv(x: jnp.ndarray, w: jnp.ndarray, *,
+                window: Optional[Tuple[int, int]] = None,
+                interpret: bool = False) -> jnp.ndarray:
+    """x (B, H, W, C) pre-padded; w (kh, kw, C, O); stride 1 VALID."""
+    b, h, ww, c = x.shape
+    k_h, k_w, c2, oc = w.shape
+    assert c == c2
+    o_h, o_w = h - k_h + 1, ww - k_w + 1
+    th, tw = window or select_window(o_h, o_w, max(k_h, k_w), c, oc)
+    th, tw = min(th, o_h), min(tw, o_w)
+    grid = (b, pl.cdiv(o_h, th), pl.cdiv(o_w, tw))
+
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, k_h=k_h, k_w=k_w, th=th, tw=tw,
+                          o_h=o_h, o_w=o_w),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, h, ww, c), lambda bi, i, j: (bi, 0, 0, 0)),
+            pl.BlockSpec((k_h, k_w, c, oc), lambda bi, i, j: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, o_h, o_w, oc),
+                               lambda bi, i, j: (bi, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, o_h, o_w, oc), x.dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def n_cycles(o_h: int, o_w: int, th: int, tw: int, batch: int = 1) -> int:
+    """Grid steps == the mapping's computing-cycle count (ceil form)."""
+    return batch * pl.cdiv(o_h, th) * pl.cdiv(o_w, tw)

@@ -1,0 +1,52 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run with interpret=True (the Pallas
+interpreter executes the kernel bodies in Python) — TPU is the target.
+``INTERPRET`` flips globally; callers can override per call.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention, mha_flash
+from .grouped_matmul import grouped_matmul
+from .im2win_conv import im2win_conv, select_window
+from .tetris_matmul import select_block_shape, tetris_matmul
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("block", "interpret"))
+def matmul(x, w, block: Optional[Tuple[int, int, int]] = None,
+           interpret: Optional[bool] = None):
+    return tetris_matmul(x, w, block=block,
+                         interpret=INTERPRET if interpret is None
+                         else interpret)
+
+
+@partial(jax.jit, static_argnames=("bm", "bf", "interpret"))
+def gmm(x, w, bm: Optional[int] = None, bf: Optional[int] = None,
+        interpret: Optional[bool] = None):
+    return grouped_matmul(x, w, bm=bm, bf=bf,
+                          interpret=INTERPRET if interpret is None
+                          else interpret)
+
+
+@partial(jax.jit, static_argnames=("window", "interpret"))
+def conv2d(x, w, window: Optional[Tuple[int, int]] = None,
+           interpret: Optional[bool] = None):
+    return im2win_conv(x, w, window=window,
+                       interpret=INTERPRET if interpret is None
+                       else interpret)
+
+
+@partial(jax.jit, static_argnames=("causal", "q_offset", "interpret"))
+def attention(q, k, v, causal: bool = True, q_offset: int = 0,
+              interpret: Optional[bool] = None):
+    return flash_attention(q, k, v, causal=causal, q_offset=q_offset,
+                           interpret=INTERPRET if interpret is None
+                           else interpret)

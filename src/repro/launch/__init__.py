@@ -1,0 +1,2 @@
+# Launcher layer: production mesh, sharding rules, step functions,
+# multi-pod dry-run, roofline analysis, train/serve drivers.

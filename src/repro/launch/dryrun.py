@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+512 placeholder host devices; record memory/cost/collective analysis.
+
+MUST be run as its own process (`python -m repro.launch.dryrun ...`) —
+the XLA_FLAGS line above executes before any other jax import, because
+jax locks the device count at first init.
+
+Results are cached as JSON under results/dryrun/ keyed by
+(arch, shape, mesh); the sweep is restartable (skips cached cells).
+
+Usage:
+    python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k \
+        --mesh multi
+    python -m repro.launch.dryrun --sweep            # everything missing
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCH_IDS, canon, get_config
+from repro.launch import roofline as rl
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh, mesh_tag
+from repro.launch.shapes import SHAPES, build_cell, cell_supported
+from repro.models import transformer as T
+
+RESULTS = Path(__file__).resolve().parents[3] / "results"
+
+
+def cell_path(arch: str, shape: str, mesh_name: str,
+              tag: str = "dryrun") -> Path:
+    return RESULTS / tag / f"{canon(arch)}__{shape}__{mesh_name}.json"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             force: bool = False, optimized: bool = True,
+             tag: str = "dryrun") -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    out_path = cell_path(arch, shape_name, mesh_name, tag)
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "status": "?", "ts": time.time()}
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        record.update(status="SKIP", reason=reason)
+        _write(out_path, record)
+        return record
+
+    try:
+        t0 = time.time()
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        fn, args, in_sh, out_sh = build_cell(cfg, shape, mesh,
+                                             optimized=optimized)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+        # loop-aware per-chip totals (cost_analysis counts while bodies
+        # once — see hlo_analysis.py; raw cost kept below for reference)
+        totals = analyze_hlo(hlo)
+        coll = {k: v for k, v in totals.coll_bytes.items()}
+
+        n_params = T.count_params(cfg)
+        n_active = T.count_params(cfg, active_only=True)
+        chips = mesh.devices.size
+        terms = rl.RooflineTerms(
+            flops_per_chip=totals.flops,
+            bytes_per_chip=totals.hbm_bytes,
+            coll_bytes_per_chip=float(coll.get("total", 0.0)),
+            chips=chips,
+            model_flops_total=rl.model_flops(cfg, shape, n_params,
+                                             n_active))
+        record.update(
+            status="OK",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            chips=chips,
+            n_params=n_params, n_active_params=n_active,
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+            },
+            cost={k: cost[k] for k in ("flops", "bytes accessed")
+                  if k in cost},
+            collectives=coll,
+            roofline={
+                "t_compute": terms.t_compute,
+                "t_memory": terms.t_memory,
+                "t_collective": terms.t_coll,
+                "dominant": terms.dominant,
+                "model_flops": terms.model_flops_total,
+                "useful_flops_fraction": terms.useful_flops_fraction,
+                "roofline_fraction": terms.roofline_fraction,
+            },
+        )
+    except Exception as e:   # record failures — they are bugs to fix
+        record.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    _write(out_path, record)
+    return record
+
+
+def _write(path: Path, record: dict) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_suffix(".tmp")
+    tmp.write_text(json.dumps(record, indent=1, default=str))
+    tmp.rename(path)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--baseline", action="store_true",
+                    help="disable beyond-paper optimizations (SPerf)")
+    ap.add_argument("--tag", default=None,
+                    help="results subdir (default dryrun_opt/dryrun_base)")
+    args = ap.parse_args()
+    tag = args.tag or ("dryrun_base" if args.baseline else "dryrun_opt")
+
+    archs = ARCH_IDS if (args.sweep or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.sweep or args.shape is None) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                t0 = time.time()
+                r = run_cell(arch, shape, mp, force=args.force,
+                             optimized=not args.baseline, tag=tag)
+                dom = r.get("roofline", {}).get("dominant", "-")
+                print(f"{arch:22s} {shape:12s} {r['mesh']:8s} "
+                      f"{r['status']:4s} dom={dom:10s} "
+                      f"({time.time() - t0:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

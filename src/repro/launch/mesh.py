@@ -1,0 +1,34 @@
+"""Production mesh definition.
+
+Single pod = 16x16 = 256 chips (TPU v5e pod slice), axes (data, model).
+Multi-pod = 2 pods = 512 chips, axes (pod, data, model); the pod axis is
+pure data parallelism over the slow inter-pod links (DCN), which is why
+gradient compression (optim/compression.py) targets exactly that axis.
+
+A FUNCTION (not a module constant) so importing never touches jax device
+state — the dry-run must set XLA_FLAGS before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh on the real local device (smoke tests, CNN
+    training, examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that carry the batch dimension (pod folds into data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def mesh_tag(mesh) -> str:
+    return "x".join(str(s) for s in mesh.devices.shape)

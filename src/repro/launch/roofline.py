@@ -1,0 +1,122 @@
+"""Roofline term derivation from a compiled dry-run artifact.
+
+Per (arch x shape x mesh) cell:
+
+    t_compute = FLOPs_per_chip / 197e12          (bf16 peak, TPU v5e)
+    t_memory  = bytes_per_chip / 819e9           (HBM bw)
+    t_coll    = collective_bytes_per_chip / 50e9 (per-link ICI bw)
+
+``compiled.cost_analysis()`` on an SPMD module reports *per-partition*
+flops/bytes (verified empirically against a hand-counted matmul), which
+is exactly the per-chip view the terms need.  Collective bytes are not in
+cost_analysis: we parse the partitioned HLO and sum the OUTPUT buffer
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute — the per-chip received-bytes proxy (ring all-reduce
+moves ~2x this; noted in EXPERIMENTS.md).
+
+MODEL_FLOPS uses 6*N*D (train, dense), 6*N_active*D (MoE), 2*N*D
+(prefill) and 2*N_active*B (decode, per step) with N from the analytic
+param count.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, float]:
+    """Per-kind summed output bytes of collective ops (per-chip view)."""
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_txt, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0.0) + _shape_bytes(shape_txt)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    chips: int
+    model_flops_total: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_coll(self) -> float:
+        return self.coll_bytes_per_chip / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_coll}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound(self) -> float:
+        """Step-time lower bound (no overlap assumption: max of terms)."""
+        return max(self.t_compute, self.t_memory, self.t_coll)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS (total) — remat/redundancy waste."""
+        hlo_total = self.flops_per_chip * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the bound:
+        (useful flops / chips / peak) / bound."""
+        if self.bound == 0:
+            return 0.0
+        t_useful = self.model_flops_total / self.chips / PEAK_FLOPS
+        return t_useful / self.bound
+
+
+def model_flops(cfg, shape, n_params: int, n_active: int) -> float:
+    """Analytic 'useful' FLOPs for the cell (whole step)."""
+    tokens = shape.batch * shape.seq
+    if shape.mode == "train":
+        return 6.0 * n_active * tokens
+    if shape.mode == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.batch      # decode: one token / seq

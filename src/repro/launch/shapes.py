@@ -1,0 +1,182 @@
+"""The assigned input-shape grid and per-cell jit assembly.
+
+Every (arch x shape) cell resolves to a concrete (step_fn, abstract args,
+in/out shardings) triple via :func:`build_cell` — used identically by the
+dry-run (lower+compile only) and by real drivers (with concrete arrays).
+
+Shapes (per the brief):
+    train_4k     seq 4096,   global_batch 256   -> train_step
+    prefill_32k  seq 32768,  global_batch 32    -> prefill_step
+    decode_32k   seq 32768,  global_batch 128   -> serve_step (1 token,
+                 cache filled to seq)
+    long_500k    seq 524288, global_batch 1     -> serve_step; requires a
+                 sub-quadratic arch (cfg.sub_quadratic) — full-attention
+                 archs are SKIPped (DESIGN.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.attention import attention_policy
+from repro.models.common import norm_policy
+from repro.models.config import ArchConfig
+from . import sharding as sh
+from .steps import (TrainConfig, init_train_state, make_prefill_step,
+                    make_serve_step, make_train_step)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq: int
+    batch: int
+    mode: str           # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ArchConfig, shape: ShapeSpec
+                   ) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full quadratic attention at 500k context — "
+                       "skipped per brief; see DESIGN.md")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """(abstract batch, shardings) for a train/prefill batch."""
+    b, s = shape.batch, shape.seq
+    extra = 1 if shape.mode == "train" else 0      # +1 token for labels
+    batch: Dict[str, Any] = {}
+    shards: Dict[str, Any] = {}
+    bd = sh.batch_dim(mesh, b)
+    if cfg.frontend == "vision":
+        batch["tokens"] = _sds((b, s - cfg.n_prefix + extra), jnp.int32)
+        batch["prefix_embeds"] = _sds((b, cfg.n_prefix, cfg.d_model),
+                                      jnp.bfloat16)
+        shards["tokens"] = NamedSharding(mesh, P(bd, None))
+        shards["prefix_embeds"] = NamedSharding(mesh, P(bd, None, None))
+    else:
+        batch["tokens"] = _sds((b, s + extra), jnp.int32)
+        shards["tokens"] = NamedSharding(mesh, P(bd, None))
+    if cfg.kind == "encdec":
+        batch["enc_embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+        shards["enc_embeds"] = NamedSharding(mesh, P(bd, None, None))
+    return batch, shards
+
+
+def default_microbatches(cfg: ArchConfig, shape: ShapeSpec, mesh) -> int:
+    """Grad-accumulation count: keep ~<=128k tokens per microbatch and
+    divide the batch evenly."""
+    target = max(1, (shape.batch * shape.seq) // 131072)
+    n = 1
+    for cand in (1, 2, 4, 8, 16, 32):
+        if shape.batch % cand == 0 and cand <= target:
+            n = cand
+    return n
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
+               microbatches: Optional[int] = None,
+               train_cfg: Optional[TrainConfig] = None,
+               optimized: bool = True):
+    """-> (fn, args_abstract: tuple, in_shardings, out_shardings)."""
+    params_shape = jax.eval_shape(partial(T.init_params, cfg),
+                                  jax.random.PRNGKey(0))
+    param_sh = sh.param_shardings(cfg, params_shape, mesh)
+    rep = sh.replicated(mesh)
+    bd_act = sh.batch_dim(mesh, shape.batch)
+    act_sh = NamedSharding(mesh, P(bd_act, None, None))
+
+    # context-parallel scores for archs whose head count doesn't divide
+    # the model axis (SPerf: the head_dim-sharded fallback all-reduces
+    # fp32 score tensors; q-row sharding removes that entirely)
+    # Mode-aware optimization policy (SPerf — measured per mode):
+    # * train: CP scores for head-indivisible archs, FSDP gather-at-use
+    #   for MoE weights, inner-scan remat, bf16 score storage - 1.15-2.3x
+    #   on the train cells.
+    # * prefill: bf16 scores only (CP/weight-gather measured as
+    #   regressions: 0.51x qwen prefill, 0.75x dsv2).
+    # * decode: everything off (HBM-floor; weight-gather at batch<=128 is
+    #   a 0.03-0.7x regression).
+    is_train = optimized and shape.mode == "train"
+    # fast_norm measured as a 0.90x regression on RG-LRU stacks (SPerf
+    # iteration 14) — gated off for recurrent mixers
+    has_rec = any(sp.mixer == "rec" for st in cfg.stages
+                  for sp in st.unit)
+    scores_sh = None
+    cp_axis = None
+    if is_train and cfg.n_heads and \
+            cfg.n_heads % mesh.shape["model"] != 0:
+        scores_sh = NamedSharding(mesh, P(bd_act, None, None, "model",
+                                          None))
+        cp_axis = (mesh, bd_act)
+
+    def with_policy(fn):
+        def wrapped(*a):
+            with attention_policy(
+                    scores_sharding=scores_sh, cp_axis=cp_axis,
+                    scores_dtype=(jnp.bfloat16 if optimized
+                                  and shape.mode != "decode" else None),
+                    inner_remat=is_train,
+                    mesh=mesh if is_train else None), \
+                 norm_policy(fast=is_train and not has_rec):
+                return fn(*a)
+        return wrapped
+
+    if shape.mode == "train":
+        n_mb = microbatches or default_microbatches(cfg, shape, mesh)
+        tc = train_cfg or TrainConfig(microbatches=n_mb)
+        state_shape = jax.eval_shape(partial(init_train_state, cfg),
+                                     jax.random.PRNGKey(0))
+        state_sh = {"params": param_sh,
+                    "opt": sh.opt_shardings(param_sh, mesh)}
+        batch, batch_sh = batch_specs(cfg, shape, mesh)
+        fn = with_policy(make_train_step(cfg, tc, act_sharding=act_sh))
+        metrics_sh = {"loss": rep, "grad_norm": rep, "lr": rep}
+        return (fn, (state_shape, batch), (state_sh, batch_sh),
+                (state_sh, metrics_sh))
+
+    if shape.mode == "prefill":
+        batch, batch_sh = batch_specs(cfg, shape, mesh)
+        fn = with_policy(make_prefill_step(cfg, cache_len=shape.seq,
+                                         act_sharding=act_sh))
+        cache_shape = jax.eval_shape(
+            lambda: T.init_cache(cfg, shape.batch, shape.seq,
+                                 enc_len=shape.seq))
+        cache_sh = sh.cache_shardings(cfg, cache_shape, mesh)
+        bd = sh.batch_dim(mesh, shape.batch)
+        out_sh = (NamedSharding(mesh, P(bd)), cache_sh)
+        return fn, (params_shape, batch), (param_sh, batch_sh), out_sh
+
+    # decode
+    cache_shape = jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.batch, shape.seq,
+                             enc_len=min(shape.seq, 32768)))
+    cache_sh = sh.cache_shardings(cfg, cache_shape, mesh)
+    bd = sh.batch_dim(mesh, shape.batch)
+    token = _sds((shape.batch, 1), jnp.int32)
+    token_sh = NamedSharding(mesh, P(bd, None))
+    pos = _sds((), jnp.int32)
+    fn = with_policy(make_serve_step(cfg, act_sharding=act_sh))
+    return (fn, (params_shape, cache_shape, token, pos),
+            (param_sh, cache_sh, token_sh, rep),
+            (token_sh, cache_sh))

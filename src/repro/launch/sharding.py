@@ -1,0 +1,198 @@
+"""Sharding rules: param/optimizer/cache/batch PartitionSpecs per arch.
+
+Policy (baseline — §Perf iterates on it):
+
+* params: 2-D sharded — FSDP over the data axes x TP over 'model'.
+  Attention projections shard heads over 'model' when divisible, else
+  head_dim (e.g. qwen's 40 heads on a 16-way axis); MoE experts shard
+  over 'model' when divisible (EP), else d_ff (TP fallback, mixtral 8e).
+* optimizer state: same spec as its param (elementwise ops).
+* batch: over the data axes ('pod' folds in); replicated when the batch
+  doesn't divide (long_500k's batch=1).
+* KV caches: batch over data axes, sequence over 'model'
+  (flash-decoding-style SP — softmax/out reductions are the only
+  cross-shard traffic); recurrent states shard their widest dim.
+
+Specs derive from pytree *paths*: the block group name ('attn', 'mlp',
+'moe', 'rec', 'ssd', 'cross') plus the leaf name are the contract, so the
+same rules cover every arch.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from .mesh import data_axes
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(f"[{e.idx}]")
+    return tuple(names)
+
+
+def _prod(mesh, axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def param_spec(names: Tuple[str, ...], shape: Tuple[int, ...], mesh,
+               cfg: ArchConfig) -> P:
+    dp = data_axes(mesh)
+    name = names[-1]
+    group = next((n for n in reversed(names[:-1])
+                  if n in ("attn", "cross", "mlp", "moe", "rec", "ssd")),
+                 None)
+    stacked = "stages" in names or "enc_stages" in names
+    off = 1 if stacked else 0
+    lead = (None,) * off
+
+    def mdl(i: int):
+        return "model" if shape[i] % mesh.shape["model"] == 0 else None
+
+    def fsdp(i: int):
+        return dp if shape[i] % _prod(mesh, dp) == 0 else None
+
+    # --- top level ---
+    if name == "embed":
+        return P(mdl(0), fsdp(1))
+    if name == "head":
+        return P(fsdp(0), mdl(1))
+
+    # --- attention (incl. cross) ---
+    if group in ("attn", "cross"):
+        if name in ("wq", "wk", "wv"):          # (L, D, H, dh)
+            if mdl(off + 1):
+                return P(*lead, fsdp(off), "model", None)
+            return P(*lead, fsdp(off), None, mdl(off + 2))
+        if name in ("bq", "bk", "bv"):          # (L, H, dh)
+            if mdl(off):
+                return P(*lead, "model", None)
+            return P(*lead, None, mdl(off + 1))
+        if name == "wo":                        # (L, H, dh, D)
+            if mdl(off):
+                return P(*lead, "model", None, fsdp(off + 2))
+            return P(*lead, None, mdl(off + 1), fsdp(off + 2))
+        if name in ("w_uk", "w_uv"):            # (L, dl, H, dh)
+            return P(*lead, fsdp(off), mdl(off + 1), None)
+        if name == "w_dkv":                     # (L, D, dl)
+            return P(*lead, fsdp(off), mdl(off + 1))
+        if name == "w_kr":                      # (L, D, dr)
+            return P(*lead, fsdp(off), None)
+
+    # --- MoE ---
+    if group == "moe":
+        if name in ("wi", "wg"):                # (L, E, D, F)
+            if mdl(off):
+                return P(*lead, "model", fsdp(off + 1), None)
+            return P(*lead, None, fsdp(off + 1), mdl(off + 2))
+        if name == "wo":                        # (L, E, F, D)
+            if mdl(off):
+                return P(*lead, "model", None, fsdp(off + 2))
+            return P(*lead, None, mdl(off + 1), fsdp(off + 2))
+        if name == "router":                    # (L, D, E)
+            return P(*lead, fsdp(off), None)
+        if name in ("shared_wi", "shared_wg"):  # (L, D, Fs)
+            return P(*lead, fsdp(off), mdl(off + 1))
+        if name == "shared_wo":                 # (L, Fs, D)
+            return P(*lead, mdl(off), fsdp(off + 1))
+
+    # --- dense MLP ---
+    if group == "mlp":
+        if name in ("wi", "wg"):                # (L, D, F)
+            return P(*lead, fsdp(off), mdl(off + 1))
+        if name == "wo":                        # (L, F, D)
+            return P(*lead, mdl(off), fsdp(off + 1))
+
+    # --- RG-LRU recurrent block ---
+    if group == "rec":
+        if name in ("wx", "wgate"):             # (L, D, W)
+            return P(*lead, fsdp(off), mdl(off + 1))
+        if name in ("wr", "wi"):                # (L, W, W)
+            return P(*lead, fsdp(off), mdl(off + 1))
+        if name == "wout":                      # (L, W, D)
+            return P(*lead, mdl(off), fsdp(off + 1))
+        if name == "conv_w":                    # (L, K, W)
+            return P(*lead, None, mdl(off + 1))
+        if name == "lam":                       # (L, W)
+            return P(*lead, mdl(off))
+
+    # --- SSD (mamba2) ---
+    if group == "ssd":
+        if name in ("wx", "wz", "wbc", "wdt"):  # (L, D, X)
+            return P(*lead, fsdp(off), mdl(off + 1))
+        if name == "wout":                      # (L, di, D)
+            return P(*lead, mdl(off), fsdp(off + 1))
+        if name == "conv_w":                    # (L, K, X)
+            return P(*lead, None, mdl(off + 1))
+
+    # norms, scalars, small vectors: replicate
+    return P(*((None,) * len(shape)))
+
+
+def param_shardings(cfg: ArchConfig, params_shape, mesh):
+    def one(path, leaf):
+        names = _path_names(path)
+        spec = param_spec(names, leaf.shape, mesh, cfg)
+        assert len(spec) <= len(leaf.shape), (names, leaf.shape, spec)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_dim(mesh, b: int):
+    dp = data_axes(mesh)
+    return dp if b % _prod(mesh, dp) == 0 else None
+
+
+def batch_spec(mesh, b: int, ndim: int) -> P:
+    return P(batch_dim(mesh, b), *((None,) * (ndim - 1)))
+
+
+def cache_spec(names: Tuple[str, ...], shape, mesh, cfg: ArchConfig) -> P:
+    name = names[-1]
+    bd = batch_dim(mesh, shape[1])      # dim 0 is the n_units stack
+
+    def mdl(i: int):
+        return "model" if shape[i] % mesh.shape["model"] == 0 else None
+
+    if name in ("k", "v"):              # (U, B, L, Hkv, dh)
+        return P(None, bd, mdl(2), None, None)
+    if name in ("ckv", "kr"):           # (U, B, L, X)
+        return P(None, bd, mdl(2), None)
+    if name == "state":                 # (U, B, H, P, N)
+        return P(None, bd, None, None, mdl(4))
+    if name == "h":                     # (U, B, W)
+        return P(None, bd, mdl(2))
+    if name == "conv":                  # (U, B, K-1, X)
+        return P(None, bd, None, mdl(3))
+    return P(*((None,) * len(shape)))
+
+
+def cache_shardings(cfg: ArchConfig, cache_shape, mesh):
+    def one(path, leaf):
+        names = _path_names(path)
+        return NamedSharding(mesh, cache_spec(names, leaf.shape, mesh, cfg))
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def opt_shardings(param_sh, mesh):
+    rep = NamedSharding(mesh, P())
+    return {"m": param_sh, "v": param_sh, "step": rep}
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,134 @@
+"""train/prefill/serve step functions (what the dry-run lowers and the
+drivers run).
+
+train_step: microbatch scan (gradient accumulation) with full remat
+inside each layer-scan unit; AdamW update; returns (state, metrics).
+prefill_step: forward over the full sequence -> (last logits, KV cache).
+serve_step: one decode token against the cache -> (next token, cache).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+
+def vocab_mask(cfg: ArchConfig) -> jnp.ndarray:
+    return (jnp.arange(cfg.padded_vocab) < cfg.vocab)
+
+
+def _model_inputs(cfg: ArchConfig, batch: Dict[str, Any]) -> Dict[str, Any]:
+    kw = {"tokens": batch["tokens"]}
+    if "prefix_embeds" in batch:
+        kw["prefix_embeds"] = batch["prefix_embeds"]
+    if "enc_embeds" in batch:
+        kw["enc_embeds"] = batch["enc_embeds"]
+    return kw
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict[str, Any],
+            act_sharding=None) -> jnp.ndarray:
+    """Next-token CE over the real (unpadded) vocabulary.  The batch
+    carries S+1 tokens; the model sees the first S, logit t predicts
+    token t+1."""
+    inputs = {**batch, "tokens": batch["tokens"][:, :-1]}
+    logits = T.forward(params, cfg, mode="train", act_sharding=act_sharding,
+                       **_model_inputs(cfg, inputs))
+    prefix = batch.get("prefix_embeds", None)
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1]:]
+    logits = logits.astype(jnp.float32)
+    labels = batch["tokens"][:, 1:]
+    mask = vocab_mask(cfg)
+    logits = jnp.where(mask[None, None, :], logits, -1e30)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -ll.mean()
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    adamw: AdamWConfig = AdamWConfig()
+
+
+def init_train_state(cfg: ArchConfig, key) -> Dict[str, Any]:
+    params = T.init_params(cfg, key)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def make_train_step(cfg: ArchConfig, tc: TrainConfig, act_sharding=None):
+    def train_step(state: Dict[str, Any], batch: Dict[str, Any]):
+        params, opt = state["params"], state["opt"]
+        n_mb = tc.microbatches
+
+        def split_mb(x):
+            return x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:])
+
+        mb_batch = {k: split_mb(v) for k, v in batch.items()}
+
+        def one_mb(acc, mb):
+            l, g = jax.value_and_grad(loss_fn)(params, cfg, mb,
+                                               act_sharding)
+            acc = jax.tree.map(
+                lambda a, gg: a + gg.astype(jnp.float32) / n_mb, acc, g)
+            return acc, l
+
+        if n_mb == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params, cfg, {k: v[0] for k, v in mb_batch.items()},
+                act_sharding)
+            losses = loss[None]
+        else:
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(one_mb, zeros, mb_batch)
+
+        lr = cosine_schedule(opt["step"], peak_lr=tc.peak_lr,
+                             warmup_steps=tc.warmup_steps,
+                             total_steps=tc.total_steps)
+        new_params, new_opt, gnorm = adamw_update(params, grads, opt, lr,
+                                                  tc.adamw)
+        metrics = {"loss": losses.mean(), "grad_norm": gnorm, "lr": lr}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, cache_len: Optional[int] = None,
+                      act_sharding=None):
+    def prefill_step(params, batch: Dict[str, Any]):
+        logits, cache = T.forward(params, cfg, mode="prefill",
+                                  cache_len=cache_len, remat=False,
+                                  act_sharding=act_sharding,
+                                  **_model_inputs(cfg, batch))
+        mask = vocab_mask(cfg)
+        last = jnp.where(mask[None, :], logits[:, -1].astype(jnp.float32),
+                         -1e30)
+        return jnp.argmax(last, axis=-1).astype(jnp.int32), cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, act_sharding=None):
+    def serve_step(params, cache, token, pos):
+        """token (B, 1) int32; pos () int32 — absolute decode position."""
+        logits, new_cache = T.forward(params, cfg, mode="decode",
+                                      tokens=token, cache=cache, pos=pos,
+                                      remat=False,
+                                      act_sharding=act_sharding)
+        mask = vocab_mask(cfg)
+        lg = jnp.where(mask[None, None, :], logits.astype(jnp.float32),
+                       -1e30)
+        nxt = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, new_cache
+    return serve_step

@@ -1,0 +1,100 @@
+"""Training driver: end-to-end supervised loop on a real mesh.
+
+On this CPU container it drives the smoke-scale configs (examples/
+train_lm.py); on hardware the same entry point takes --arch <id> with
+the production mesh.  Wires together: config -> sharded init ->
+TokenStream pipeline -> train_step -> CheckpointStore + TrainSupervisor
+(heartbeats, straggler log, restart-exact resume).
+
+Usage:
+    python -m repro.launch.train --arch stablelm_1_6b --smoke \
+        --steps 100 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointStore
+from repro.configs import get_config
+from repro.data import ShardedDataPipeline
+from repro.data.synthetic import TokenStream
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import (TrainConfig, init_train_state,
+                                make_train_step)
+from repro.models import transformer as T
+from repro.runtime import HeartbeatMonitor, TrainSupervisor
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm_1_6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    tc = TrainConfig(microbatches=args.microbatches, peak_lr=args.lr,
+                     warmup_steps=max(2, args.steps // 20),
+                     total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, tc))
+
+    ts = TokenStream(vocab=cfg.vocab, seq_len=args.seq,
+                     global_batch=args.batch, seed=args.seed)
+    pipe = ShardedDataPipeline(ts)
+    store = CheckpointStore(Path(args.ckpt_dir) / cfg.name, keep=2,
+                            async_save=True)
+    sup = TrainSupervisor(store=store, pipeline=pipe,
+                          monitor=HeartbeatMonitor(1),
+                          save_every=args.save_every)
+
+    def wrapped(state, tokens):
+        state, metrics = step_fn(state, {"tokens": jnp.asarray(tokens)})
+        return state, metrics
+
+    t0 = time.time()
+    if args.resume:
+        like = jax.eval_shape(partial(init_train_state, cfg),
+                              jax.random.PRNGKey(args.seed))
+        state, last = sup.resume(like, _metric_logger(wrapped, t0),
+                                 steps=args.steps)
+    else:
+        state = init_train_state(cfg, jax.random.PRNGKey(args.seed))
+        state, last = sup.run(state, _metric_logger(wrapped, t0),
+                              steps=args.steps)
+    store.wait()
+    print(f"done: {last} steps in {time.time()-t0:.1f}s; "
+          f"events={sup.events[-3:]}")
+
+
+def _metric_logger(step_fn, t0, every: int = 10):
+    counter = {"n": 0}
+
+    def fn(state, batch):
+        state, metrics = step_fn(state, batch)
+        counter["n"] += 1
+        if counter["n"] % every == 0 or counter["n"] == 1:
+            print(f"step {counter['n']:>5d}  "
+                  f"loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+        return state, metrics
+    return fn
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+# LM substrate: pure-JAX model definitions for the assigned architectures.
+from .config import ArchConfig, BlockSpec, Stage
+from .moe import MoEConfig
+from .ssm import SSMConfig
+from . import transformer

@@ -1,0 +1,262 @@
+"""Attention: GQA / MQA / sliding-window / local / MLA, with flash-style
+q-block streaming so 32k-prefill activations stay O(S * block) and
+sliding-window variants are genuinely sub-quadratic (the kv slice per
+q-block is bounded by window + block).
+
+Shapes: q (B, Sq, Hq, Dh); k/v (B, Sk, Hkv, Dh) with Hq % Hkv == 0.
+GQA is computed grouped (no kv head materialised expansion).
+All masks derive from absolute positions, so the same code serves train
+(q_offset=0), prefill, and decode (Sq=1, q_offset=cache position).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+# --- tunable attention policy (set by the launcher, read at trace time) ---
+# scores_sharding: NamedSharding for the (B,Hkv,G,Bq,Sk) score tensor.
+#   Context-parallel q-row sharding rescues archs whose head counts don't
+#   divide the model axis (SPerf iteration: qwen 40H on a 16-way axis).
+# scores_dtype: jnp.float32 (default) or bf16 softmax storage.
+_SCORES_SHARDING = contextvars.ContextVar("scores_sharding", default=None)
+_SCORES_DTYPE = contextvars.ContextVar("scores_dtype", default=None)
+_CP_AXIS = contextvars.ContextVar("cp_axis", default=None)  # (mesh, bd)
+_INNER_REMAT = contextvars.ContextVar("inner_remat", default=False)
+_POLICY_MESH = contextvars.ContextVar("policy_mesh", default=None)
+
+
+def policy_mesh():
+    """Mesh registered by the launcher policy (None on host meshes)."""
+    return _POLICY_MESH.get()
+
+
+@contextlib.contextmanager
+def attention_policy(scores_sharding=None, scores_dtype=None,
+                     cp_axis=None, inner_remat=False, mesh=None):
+    """cp_axis: (mesh, batch_dim_name) enables context-parallel q blocks:
+    each q block is row-sharded over 'model' and k/v are gathered inside
+    attention (cheap: one layer's k/v per chip), so scores, softmax and
+    the out-matmul are fully local — the rescue path for head counts
+    that don't divide the model axis."""
+    t1 = _SCORES_SHARDING.set(scores_sharding)
+    t2 = _SCORES_DTYPE.set(scores_dtype)
+    t3 = _CP_AXIS.set(cp_axis)
+    t4 = _INNER_REMAT.set(inner_remat)
+    t5 = _POLICY_MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _SCORES_SHARDING.reset(t1)
+        _SCORES_DTYPE.reset(t2)
+        _CP_AXIS.reset(t3)
+        _INNER_REMAT.reset(t4)
+        _POLICY_MESH.reset(t5)
+
+
+def _cp_constrain(qb, k, v):
+    """Row-shard a q block over 'model'; replicate k/v heads/dh."""
+    cp = _CP_AXIS.get()
+    if cp is None:
+        return qb, k, v
+    mesh, bd = cp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    if qb.shape[1] % mesh.shape["model"] == 0:
+        qb = jax.lax.with_sharding_constraint(
+            qb, NamedSharding(mesh, P(bd, "model", None, None, None)))
+        k = jax.lax.with_sharding_constraint(
+            k, NamedSharding(mesh, P(bd, None, None, None)))
+        v = jax.lax.with_sharding_constraint(
+            v, NamedSharding(mesh, P(bd, None, None, None)))
+    return qb, k, v
+
+
+def _cp_constrain_out(out):
+    """Pin the attention output to q-row sharding too: wsc transposes to
+    itself, so the *cotangent* of out stays row-sharded in backward —
+    without this, d(scores) = dout x v contracts a sharded dv and
+    all-reduces a score-sized tensor (measured: 5.5 TB/chip on qwen)."""
+    cp = _CP_AXIS.get()
+    if cp is None:
+        return out
+    mesh, bd = cp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    if out.shape[1] % mesh.shape["model"] == 0:
+        out = jax.lax.with_sharding_constraint(
+            out, NamedSharding(mesh, P(bd, "model", None, None, None)))
+    return out
+
+
+def _constrain_scores(scores: jnp.ndarray) -> jnp.ndarray:
+    ns = _SCORES_SHARDING.get()
+    if ns is None:
+        return scores
+    spec = ns.spec
+    # applicable only if every named dim divides (decode q=1 doesn't)
+    for dim, name in enumerate(spec):
+        if name is not None:
+            ax = name if isinstance(name, str) else name[0]
+            if scores.shape[dim] % ns.mesh.shape[ax]:
+                return scores
+    return jax.lax.with_sharding_constraint(scores, ns)
+
+
+def _attend_block(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  pos_q: jnp.ndarray, pos_k: jnp.ndarray, *,
+                  causal: bool, window: Optional[int],
+                  kv_len: Optional[jnp.ndarray],
+                  scale: float) -> jnp.ndarray:
+    """One q-block against one kv-block.  q (B,Bq,Hkv,G,Dh);
+    k/v (B,Sk,Hkv,Dh); returns (B,Bq,Hkv,G,Dh)."""
+    sdt = _SCORES_DTYPE.get() or jnp.float32
+    scores = jnp.einsum("bqhgd,bshd->bhgqs", q, k,
+                        preferred_element_type=sdt) * scale
+    scores = _constrain_scores(scores.astype(sdt))
+    mask = jnp.ones(scores.shape[-2:], bool)
+    if causal:
+        mask &= pos_k[None, :] <= pos_q[:, None]
+    if window is not None:
+        mask &= pos_k[None, :] > pos_q[:, None] - window
+    if kv_len is not None:        # decode: ignore cache beyond fill level
+        mask &= (pos_k < kv_len)[None, :]
+    scores = jnp.where(mask, scores, jnp.asarray(NEG_INF, sdt))
+    # row stats in fp32 (stable); storage in scores_dtype — the bf16
+    # option halves the softmax-chain HBM traffic (bf16 keeps the fp32
+    # exponent range, so the -1e30 mask value survives)
+    m = jax.lax.stop_gradient(
+        jnp.max(scores.astype(jnp.float32), -1, keepdims=True))
+    e = jnp.exp(scores - m.astype(sdt))
+    denom = jnp.sum(e.astype(jnp.float32), -1, keepdims=True)
+    w = (e / denom.astype(sdt)).astype(v.dtype)
+    return jnp.einsum("bhgqs,bshd->bqhgd", w, v)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True,
+              window: Optional[int] = None,
+              q_offset=0,
+              kv_len: Optional[jnp.ndarray] = None,
+              q_block: int = 512) -> jnp.ndarray:
+    """Multi-head attention with q-block streaming.
+
+    window: sliding/local attention width (None = full).
+    q_offset: absolute position of q[0] (decode/continuation).
+    kv_len: actual fill level of the kv buffer (decode caches).
+    """
+    b, sq, hq, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]               # may differ from dh (MLA)
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, sq, hkv, g, dh)
+
+    if sq <= q_block:
+        pos_q = q_offset + jnp.arange(sq)
+        pos_k = jnp.arange(sk)
+        qg, k, v = _cp_constrain(qg, k, v)
+        out = _attend_block(qg, k, v, pos_q, pos_k, causal=causal,
+                            window=window, kv_len=kv_len, scale=scale)
+        out = _cp_constrain_out(out)
+        return out.reshape(b, sq, hq, dv)
+
+    sq_orig = sq
+    if sq % q_block:                 # pad q; padded rows are discarded
+        pad = q_block - sq % q_block
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        sq = sq + pad
+    n_blocks = sq // q_block
+
+    cp = _CP_AXIS.get()
+    if cp is not None:
+        # gather q once per layer (cheap) so per-block slicing and the
+        # per-block q-row resharding are purely local
+        mesh, bd = cp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        qg = jax.lax.with_sharding_constraint(
+            qg, NamedSharding(mesh, P(bd, None, None, None, None)))
+
+    # sliding window: each q-block only needs a bounded kv slice
+    kv_slice = sk if window is None else min(sk, window + q_block)
+
+    def _block(qb, kb, vb, pos_q, pos_k):
+        qb, kb, vb = _cp_constrain(qb, kb, vb)
+        out = _attend_block(qb, kb, vb, pos_q, pos_k, causal=causal,
+                            window=window, kv_len=kv_len, scale=scale)
+        return _cp_constrain_out(out)
+
+    if _INNER_REMAT.get():
+        # remat: scores/softmax recomputed in backward instead of
+        # stacking O(n_blocks) score-sized residuals per layer
+        _block = jax.checkpoint(_block)
+
+    def body(carry, qb_idx):
+        qb = jax.lax.dynamic_slice_in_dim(qg, qb_idx * q_block, q_block, 1)
+        pos_q = q_offset + qb_idx * q_block + jnp.arange(q_block)
+        if kv_slice == sk:
+            kb, vb = k, v
+            kv_start = jnp.array(0, jnp.int32)
+        else:
+            kv_start = jnp.clip(q_offset + qb_idx * q_block
+                                - (kv_slice - q_block), 0, sk - kv_slice)
+            kb = jax.lax.dynamic_slice_in_dim(k, kv_start, kv_slice, 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, kv_start, kv_slice, 1)
+        pos_k = kv_start + jnp.arange(kv_slice)
+        out = _block(qb, kb, vb, pos_q, pos_k)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(n_blocks))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, hkv, g, dv)
+    return out.reshape(b, sq, hq, dv)[:, :sq_orig]
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, length: int, hkv: int, dh: int,
+                  dtype=jnp.bfloat16) -> dict:
+    return {"k": jnp.zeros((batch, length, hkv, dh), dtype),
+            "v": jnp.zeros((batch, length, hkv, dh), dtype)}
+
+
+def cache_insert(cache: dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                 pos) -> dict:
+    """Insert (B, S_new, Hkv, Dh) at position `pos` (static or traced).
+    For ring (sliding-window) caches pass pos % length."""
+    return {"k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new,
+                                                     pos, 1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new,
+                                                     pos, 1)}
+
+
+def decode_attention_ring(q: jnp.ndarray, cache: dict, step,
+                          window: int) -> jnp.ndarray:
+    """Decode vs a ring buffer of size `window` (SWA long-context decode).
+    Ring entries hold absolute positions step-window+1..step (mod wrap);
+    masking by absolute position is wrap-invariant, so plain full
+    attention over the ring with kv_len handles it."""
+    b, sq, hq, dh = q.shape
+    length = cache["k"].shape[1]
+    # absolute position of ring slot i: derive from step
+    slot = jnp.arange(length)
+    cur = step % length
+    abs_pos = jnp.where(slot <= cur, step - cur + slot,
+                        step - cur + slot - length)
+    hkv = cache["k"].shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bqhgd,bshd->bhgqs", qg, cache["k"]) * scale
+    scores = scores.astype(jnp.float32)
+    valid = (abs_pos >= 0) & (abs_pos <= step) & (abs_pos > step - window)
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, -1).astype(cache["v"].dtype)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", w, cache["v"])
+    return out.reshape(b, sq, hq, dh)

@@ -1,0 +1,112 @@
+"""Shared model primitives (pure JAX, param pytrees, bf16 compute)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+# fast_norm (set by the launcher policy for optimized train cells): keep
+# norm elementwise chains in bf16, accumulating the variance reduction in
+# fp32 *inside the reduce* — avoids materialising two fp32 (B,S,D)
+# copies per norm per pass, the dominant HBM term on dense train cells
+# (EXPERIMENTS.md §Perf iteration 12).
+import contextlib
+import contextvars
+
+_FAST_NORM = contextvars.ContextVar("fast_norm", default=False)
+
+
+@contextlib.contextmanager
+def norm_policy(fast: bool):
+    tok = _FAST_NORM.set(fast)
+    try:
+        yield
+    finally:
+        _FAST_NORM.reset(tok)
+
+
+def cast(x: jnp.ndarray) -> jnp.ndarray:
+    return x.astype(COMPUTE_DTYPE)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6
+             ) -> jnp.ndarray:
+    dt = x.dtype
+    if _FAST_NORM.get() and dt == jnp.bfloat16:
+        # fp32-accumulated reduction, bf16 elementwise (no fp32 copies)
+        var = jnp.mean(x * x, axis=-1, keepdims=True,
+                       dtype=jnp.float32)
+        inv = jax.lax.rsqrt(var + eps).astype(dt)
+        return x * inv * cast(scale)
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * cast(scale)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, -1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * cast(scale) + cast(bias)
+
+
+def rotary_cos_sin(positions: jnp.ndarray, dim: int,
+                   base: float = 10000.0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (...,) int -> cos/sin (..., dim//2) in fp32."""
+    inv = 1.0 / (base ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rotary(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+                 rot_dim: Optional[int] = None) -> jnp.ndarray:
+    """x: (..., seq, heads, dim); cos/sin: (..., seq, dim_rot//2).
+    Rotates the first `rot_dim` features (partial rotary supported)."""
+    d = x.shape[-1] if rot_dim is None else rot_dim
+    xr, xp = x[..., :d], x[..., d:]
+    x1, x2 = jnp.split(xr, 2, axis=-1)
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return jnp.concatenate([out, xp], axis=-1) if xp.shape[-1] else out
+
+
+def sinusoidal_at(positions: jnp.ndarray, dim: int) -> jnp.ndarray:
+    """positions (n,) (may be traced) -> (n, dim)."""
+    inv = 1.0 / (10000.0 ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[:, None] * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+def sinusoidal_positions(n: int, dim: int) -> jnp.ndarray:
+    return sinusoidal_at(jnp.arange(n), dim)
+
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...],
+               fan_in: Optional[int] = None) -> jnp.ndarray:
+    fan_in = fan_in or shape[0]
+    return (jax.random.normal(key, shape, jnp.float32)
+            * (1.0 / math.sqrt(fan_in)))
+
+
+def embed_init(key: jax.Array, shape: Tuple[int, ...]) -> jnp.ndarray:
+    return jax.random.normal(key, shape, jnp.float32) * 0.02
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    """Pad vocab so the embedding shards cleanly over the model axis."""
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+def keygen(key: jax.Array):
+    """Infinite stream of fresh PRNG keys."""
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub

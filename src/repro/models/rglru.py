@@ -1,0 +1,59 @@
+"""RG-LRU recurrent mixer (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+r_t = sigmoid(W_a x_t);  i_t = sigmoid(W_x x_t)
+log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill use jax.lax.associative_scan over the sequence (log-depth,
+collective-free along batch/width shards); decode is the O(1) update.
+The full recurrent block is: linear-in -> causal conv1d(w=4) -> RG-LRU ->
+gated linear-out, matching the Griffin recurrent block.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import cast
+
+C_FACTOR = 8.0
+
+
+def rg_lru(x: jnp.ndarray, r: jnp.ndarray, i: jnp.ndarray,
+           lam: jnp.ndarray, h0: Optional[jnp.ndarray] = None
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x, r, i: (B,S,W); lam (W,).  Returns (y (B,S,W), h_last (B,W))."""
+    f32 = jnp.float32
+    log_a = (-C_FACTOR * jax.nn.softplus(lam.astype(f32))
+             * jax.nn.sigmoid(r.astype(f32)))               # (B,S,W)
+    a = jnp.exp(log_a)
+    gated = (jax.nn.sigmoid(i.astype(f32)) * x.astype(f32)
+             * jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)))
+
+    if h0 is not None:
+        # fold the carried state into the first step
+        gated = gated.at[:, 0].add(a[:, 0] * h0.astype(f32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype), h[:, -1].astype(x.dtype)
+
+
+def rg_lru_step(x: jnp.ndarray, r: jnp.ndarray, i: jnp.ndarray,
+                lam: jnp.ndarray, h: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One token: x,r,i (B,1,W); h (B,W)."""
+    f32 = jnp.float32
+    log_a = (-C_FACTOR * jax.nn.softplus(lam.astype(f32))
+             * jax.nn.sigmoid(r[:, 0].astype(f32)))
+    a = jnp.exp(log_a)
+    gated = (jax.nn.sigmoid(i[:, 0].astype(f32)) * x[:, 0].astype(f32)
+             * jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)))
+    h_new = a * h.astype(f32) + gated
+    return h_new.astype(x.dtype)[:, None], h_new.astype(x.dtype)

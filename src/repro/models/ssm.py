@@ -1,0 +1,151 @@
+"""Mamba-2 SSD (state-space duality) mixer, chunked matmul form
+[arXiv:2405.21060].
+
+Train/prefill run the chunked algorithm: intra-chunk quadratic (masked
+decay matmul, MXU-shaped) + inter-chunk state recurrence (scan over
+chunks) — O(S * chunk) memory and O(S * chunk + S * ds * dh) compute.
+Decode is the O(1) recurrent update.  kernels/ssd_chunk.py provides the
+Pallas intra-chunk kernel; this module is the pure-JAX reference used by
+the models.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import cast
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    d_state: int = 128
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 256
+
+
+def segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a (..., l) -> (..., l, l) with out[i,j] = sum a[j+1..i], -inf above
+    the diagonal (decay matrix exponent)."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, -1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                b: jnp.ndarray, c: jnp.ndarray, d_skip: jnp.ndarray,
+                cfg: SSMConfig,
+                init_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,H,P); dt (B,S,H) post-softplus; a_log (H,) with A=-exp(a_log);
+    b,c (B,S,G,N); d_skip (H,).  Returns (y (B,S,H,P), state (B,H,P,N))."""
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    L = min(cfg.chunk, S)
+    S_orig = S
+    if S % L:
+        # pad with dt=0 tokens: decay exp(0)=1 and contribution dt*x=0,
+        # so padding is exact for both outputs and the final state
+        pad = L - S % L
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)]
+                                 + [(0, 0)] * (a.ndim - 2))
+        x, dt, b, c = zpad(x), zpad(dt), zpad(b), zpad(c)
+        S = S + pad
+    nc = S // L
+    rep = H // G
+
+    f32 = jnp.float32
+    A = -jnp.exp(a_log.astype(f32))                        # (H,)
+    dA = dt.astype(f32) * A                                # (B,S,H)
+    xdt = x * dt[..., None].astype(x.dtype)                # (B,S,H,P)
+
+    # chunked views
+    dA_c = dA.reshape(B, nc, L, H)
+    x_c = xdt.reshape(B, nc, L, H, P)
+    b_c = b.reshape(B, nc, L, G, N)
+    c_c = c.reshape(B, nc, L, G, N)
+
+    dA_cs = jnp.cumsum(dA_c, axis=2)                       # (B,nc,L,H)
+    # intra-chunk: y[i] = sum_j<=i C_i . B_j exp(sum dA (j,i]) xdt[j]
+    Ldec = jnp.exp(segsum(jnp.moveaxis(dA_c, -1, -2)))     # (B,nc,H,L,L)
+    cb = jnp.einsum("bnigs,bnjgs->bngij", c_c, b_c)        # (B,nc,G,L,L)
+    cb = jnp.repeat(cb, rep, axis=2)                       # (B,nc,H,L,L)
+    y_intra = jnp.einsum("bnhij,bnjhp->bnihp",
+                         (cb * Ldec).astype(x.dtype), x_c)
+
+    # chunk-final states: S_n = sum_j B_j exp(dA_total - dA_cs[j]) xdt[j]
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)    # (B,nc,L,H)
+    b_rep = jnp.repeat(b_c, rep, axis=3)                    # (B,nc,L,H,N)
+    states = jnp.einsum("bnjhs,bnjh,bnjhp->bnhps", b_rep,
+                        decay_to_end.astype(x.dtype), x_c)  # (B,nc,H,P,N)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])               # (B,nc,H)
+    h0 = (jnp.zeros((B, H, P, N), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(h, inp):
+        dec, s_new = inp
+        h_out = h                                          # state BEFORE chunk
+        h = h * dec[..., None, None] + s_new.astype(f32)
+        return h, h_out
+
+    decs = jnp.moveaxis(chunk_decay, 1, 0)                  # (nc,B,H)
+    snews = jnp.moveaxis(states, 1, 0)                      # (nc,B,H,P,N)
+    h_final, h_prevs = jax.lax.scan(step, h0, (decs, snews))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                   # (B,nc,H,P,N)
+
+    # inter-chunk contribution: C_i exp(dA_cs[i]) h_prev
+    in_decay = jnp.exp(dA_cs)                               # (B,nc,L,H)
+    c_rep = jnp.repeat(c_c, rep, axis=3)                    # (B,nc,L,H,N)
+    y_inter = jnp.einsum("bnihs,bnih,bnhps->bnihp", c_rep,
+                         in_decay.astype(x.dtype),
+                         h_prevs.astype(x.dtype))
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + x * d_skip.astype(x.dtype)[None, None, :, None]
+    return y[:, :S_orig], h_final.astype(x.dtype)
+
+
+def ssd_decode_step(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                    b: jnp.ndarray, c: jnp.ndarray, d_skip: jnp.ndarray,
+                    state: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One token: x (B,1,H,P); b,c (B,1,G,N); state (B,H,P,N)."""
+    B, _, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    f32 = jnp.float32
+    A = -jnp.exp(a_log.astype(f32))
+    dA = jnp.exp(dt[:, 0].astype(f32) * A)                  # (B,H)
+    b_rep = jnp.repeat(b[:, 0], rep, axis=1)                # (B,H,N)
+    c_rep = jnp.repeat(c[:, 0], rep, axis=1)
+    xdt = (x[:, 0] * dt[:, 0, :, None].astype(x.dtype)).astype(f32)
+    new_state = (state.astype(f32) * dA[..., None, None]
+                 + jnp.einsum("bhp,bhn->bhpn", xdt, b_rep.astype(f32)))
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, c_rep.astype(f32))
+    y = y.astype(x.dtype) + x[:, 0] * d_skip.astype(x.dtype)[None, :, None]
+    return y[:, None], new_state.astype(state.dtype)
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray,
+                  state: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv.  x (B,S,D); w (K,D); state (B,K-1,D) holds
+    the trailing inputs of the previous segment.  Returns (y, new_state)."""
+    k = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+           if state is None else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * cast(w[i])[None, None, :]
+            for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else pad
+    return y, new_state

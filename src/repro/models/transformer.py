@@ -1,0 +1,561 @@
+"""Model assembly: param init, train/prefill/decode forward passes.
+
+Layers are scanned (jax.lax.scan over params stacked on an n_units axis)
+so HLO size stays flat in depth; the scan unit is the stage's repeating
+block pattern (e.g. RecurrentGemma's (rec, rec, attn)).  Training wraps
+the scan unit in jax.checkpoint (full remat inside a unit, activations
+saved only at unit boundaries).
+
+Caches mirror the stage/param structure: per position-in-unit, a pytree
+stacked over n_units.  Sliding-window attention uses ring buffers; MLA
+caches the 512-d compressed kv + shared rope key (the paper-faithful
+small cache); SSD/RG-LRU cache O(1) recurrent states + conv tails.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_lib
+from .common import (apply_rotary, cast, dense_init, embed_init, keygen,
+                     layer_norm, rms_norm, rotary_cos_sin, sinusoidal_at,
+                     sinusoidal_positions)
+from .config import ArchConfig, BlockSpec, Stage
+from .moe import MoEConfig, moe_ffn
+from .rglru import rg_lru, rg_lru_step
+from .ssm import causal_conv1d, ssd_chunked, ssd_decode_step
+
+
+def _norm(x, p, cfg: ArchConfig):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+def _norm_params(cfg: ArchConfig, d: int) -> Dict:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Block param init
+# ---------------------------------------------------------------------------
+
+def init_block(key: jax.Array, cfg: ArchConfig, spec: BlockSpec) -> Dict:
+    ks = keygen(key)
+    d, dh = cfg.d_model, cfg.head_dim
+    p: Dict[str, Any] = {}
+
+    if spec.mixer == "gqa":
+        h, hk = cfg.n_heads, cfg.n_kv_heads
+        p["attn"] = {
+            "ln": _norm_params(cfg, d),
+            "wq": dense_init(next(ks), (d, h, dh), d),
+            "wk": dense_init(next(ks), (d, hk, dh), d),
+            "wv": dense_init(next(ks), (d, hk, dh), d),
+            "wo": dense_init(next(ks), (h, dh, d), h * dh),
+        }
+        if cfg.qkv_bias:
+            p["attn"]["bq"] = jnp.zeros((h, dh), jnp.float32)
+            p["attn"]["bk"] = jnp.zeros((hk, dh), jnp.float32)
+            p["attn"]["bv"] = jnp.zeros((hk, dh), jnp.float32)
+    elif spec.mixer == "mla":
+        h = cfg.n_heads
+        dr, dl = cfg.rope_dim, cfg.kv_lora
+        p["attn"] = {
+            "ln": _norm_params(cfg, d),
+            "wq": dense_init(next(ks), (d, h, dh + dr), d),
+            "w_dkv": dense_init(next(ks), (d, dl), d),
+            "w_kr": dense_init(next(ks), (d, dr), d),
+            "kv_ln": {"scale": jnp.ones((dl,), jnp.float32)},
+            "w_uk": dense_init(next(ks), (dl, h, dh), dl),
+            "w_uv": dense_init(next(ks), (dl, h, dh), dl),
+            "wo": dense_init(next(ks), (h, dh, d), h * dh),
+        }
+    elif spec.mixer == "rec":
+        w = cfg.rnn_width
+        p["rec"] = {
+            "ln": _norm_params(cfg, d),
+            "wx": dense_init(next(ks), (d, w), d),
+            "wgate": dense_init(next(ks), (d, w), d),
+            "conv_w": dense_init(next(ks), (cfg.conv_width, w), cfg.conv_width),
+            "wr": dense_init(next(ks), (w, w), w),
+            "wi": dense_init(next(ks), (w, w), w),
+            "lam": jnp.linspace(0.5, 4.0, w).astype(jnp.float32),
+            "wout": dense_init(next(ks), (w, d), w),
+        }
+    elif spec.mixer == "ssd":
+        s = cfg.ssm
+        di, hh, pp = s.d_inner, s.n_heads, s.head_dim
+        gn = 2 * s.n_groups * s.d_state
+        p["ssd"] = {
+            "ln": _norm_params(cfg, d),
+            "wx": dense_init(next(ks), (d, di), d),
+            "wz": dense_init(next(ks), (d, di), d),
+            "wbc": dense_init(next(ks), (d, gn), d),
+            "wdt": dense_init(next(ks), (d, hh), d),
+            "dt_bias": jnp.zeros((hh,), jnp.float32),
+            "a_log": jnp.log(jnp.linspace(1.0, 16.0, hh)).astype(jnp.float32),
+            "d_skip": jnp.ones((hh,), jnp.float32),
+            "conv_w": dense_init(next(ks), (s.conv_width, di + gn),
+                                 s.conv_width),
+            "gate_ln": {"scale": jnp.ones((di,), jnp.float32)},
+            "wout": dense_init(next(ks), (di, d), di),
+        }
+
+    if spec.cross:
+        h = cfg.n_heads
+        p["cross"] = {
+            "ln": _norm_params(cfg, d),
+            "wq": dense_init(next(ks), (d, h, dh), d),
+            "wk": dense_init(next(ks), (d, h, dh), d),
+            "wv": dense_init(next(ks), (d, h, dh), d),
+            "wo": dense_init(next(ks), (h, dh, d), h * dh),
+        }
+
+    if spec.ffn in ("dense", "gelu"):
+        f = cfg.d_ff
+        p["mlp"] = {
+            "ln": _norm_params(cfg, d),
+            "wi": dense_init(next(ks), (d, f), d),
+            "wo": dense_init(next(ks), (f, d), f),
+        }
+        if spec.ffn == "dense":
+            p["mlp"]["wg"] = dense_init(next(ks), (d, f), d)
+    elif spec.ffn == "moe":
+        m = cfg.moe
+        e, f = m.n_experts, m.d_ff
+        p["moe"] = {
+            "ln": _norm_params(cfg, d),
+            "router": dense_init(next(ks), (d, e), d),
+            "wi": dense_init(next(ks), (e, d, f), d),
+            "wg": dense_init(next(ks), (e, d, f), d),
+            "wo": dense_init(next(ks), (e, f, d), f),
+        }
+        if m.n_shared:
+            fs = m.n_shared * f
+            p["moe"]["shared_wi"] = dense_init(next(ks), (d, fs), d)
+            p["moe"]["shared_wg"] = dense_init(next(ks), (d, fs), d)
+            p["moe"]["shared_wo"] = dense_init(next(ks), (fs, d), fs)
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Dict:
+    ks = keygen(key)
+    d, v = cfg.d_model, cfg.padded_vocab
+    params: Dict[str, Any] = {
+        "embed": embed_init(next(ks), (v, d)),
+        "final_norm": _norm_params(cfg, d),
+    }
+    if not cfg.tied_embeddings:
+        params["head"] = dense_init(next(ks), (d, v), d)
+
+    def stage_params(stages):
+        out = []
+        for st in stages:
+            unit = []
+            for spec in st.unit:
+                sub = jax.random.split(next(ks), st.n_units)
+                unit.append(jax.vmap(lambda k: init_block(k, cfg, spec))(sub))
+            out.append(tuple(unit))
+        return tuple(out)
+
+    params["stages"] = stage_params(cfg.stages)
+    if cfg.kind == "encdec":
+        enc_spec = Stage((BlockSpec(mixer="gqa", ffn="gelu", causal=False),),
+                         cfg.n_enc_layers)
+        params["enc_stages"] = stage_params((enc_spec,))
+        params["enc_norm"] = _norm_params(cfg, d)
+    return params
+
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    shapes = jax.eval_shape(partial(init_params, cfg),
+                            jax.random.PRNGKey(0))
+    total = sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+    if active_only and cfg.moe is not None:
+        m = cfg.moe
+        n_moe = sum(st.n_units * sum(1 for sp in st.unit if sp.ffn == "moe")
+                    for st in cfg.stages)
+        per_expert = 3 * cfg.d_model * m.d_ff
+        total -= n_moe * per_expert * (m.n_experts - m.top_k)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+def init_block_cache(cfg: ArchConfig, spec: BlockSpec, batch: int,
+                     length: int, enc_len: int = 0,
+                     dtype=jnp.bfloat16) -> Dict:
+    p: Dict[str, Any] = {}
+    if spec.mixer == "gqa":
+        lc = min(length, spec.window) if spec.window else length
+        p["attn"] = attn_lib.init_kv_cache(batch, lc, cfg.n_kv_heads,
+                                           cfg.head_dim, dtype)
+    elif spec.mixer == "mla":
+        p["attn"] = {"ckv": jnp.zeros((batch, length, cfg.kv_lora), dtype),
+                     "kr": jnp.zeros((batch, length, cfg.rope_dim), dtype)}
+    elif spec.mixer == "rec":
+        w = cfg.rnn_width
+        p["rec"] = {"h": jnp.zeros((batch, w), dtype),
+                    "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype)}
+    elif spec.mixer == "ssd":
+        s = cfg.ssm
+        p["ssd"] = {
+            "state": jnp.zeros((batch, s.n_heads, s.head_dim, s.d_state),
+                               dtype),
+            "conv": jnp.zeros((batch, s.conv_width - 1,
+                               s.d_inner + 2 * s.n_groups * s.d_state),
+                              dtype)}
+    if spec.cross:
+        p["cross"] = attn_lib.init_kv_cache(batch, enc_len, cfg.n_heads,
+                                            cfg.head_dim, dtype)
+    return p
+
+
+def init_cache(cfg: ArchConfig, batch: int, length: int,
+               enc_len: int = 0, dtype=jnp.bfloat16):
+    out = []
+    for st in cfg.stages:
+        unit = []
+        for spec in st.unit:
+            one = init_block_cache(cfg, spec, batch, length, enc_len, dtype)
+            unit.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (st.n_units,) + x.shape), one))
+        out.append(tuple(unit))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Block forward
+# ---------------------------------------------------------------------------
+
+def _rope_dims(cfg: ArchConfig) -> int:
+    rd = int(cfg.head_dim * cfg.rope_frac)
+    return rd - rd % 2
+
+
+def _pad_seq(a: jnp.ndarray, target: int) -> jnp.ndarray:
+    """Pad dim 1 (sequence) with zeros up to `target`."""
+    if a.shape[1] >= target:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[1] = (0, target - a.shape[1])
+    return jnp.pad(a, pad)
+
+
+def _gqa_block(x, p, spec, cfg, mode, cache, pos, cache_len=None):
+    h = _norm(x, p["ln"], cfg)
+    q = jnp.einsum("bsd,dhe->bshe", h, cast(p["wq"]))
+    k = jnp.einsum("bsd,dhe->bshe", h, cast(p["wk"]))
+    v = jnp.einsum("bsd,dhe->bshe", h, cast(p["wv"]))
+    if "bq" in p:
+        q = q + cast(p["bq"])
+        k = k + cast(p["bk"])
+        v = v + cast(p["bv"])
+    rd = _rope_dims(cfg)
+    if rd and spec.causal:
+        if mode == "decode":
+            positions = jnp.full((1,), pos)
+        else:
+            positions = jnp.arange(x.shape[1])
+        cos, sin = rotary_cos_sin(positions, rd, cfg.rope_base)
+        q = apply_rotary(q, cos, sin, rd)
+        k = apply_rotary(k, cos, sin, rd)
+
+    new_cache = None
+    if mode == "decode":
+        lc = cache["attn"]["k"].shape[1]
+        ring = spec.window is not None and lc == spec.window
+        slot = pos % lc if ring else pos
+        c = attn_lib.cache_insert(cache["attn"], k, v, slot)
+        new_cache = {"attn": c}
+        if ring:
+            out = attn_lib.decode_attention_ring(q, c, pos, spec.window)
+        else:
+            out = attn_lib.attention(q, c["k"], c["v"], causal=True,
+                                     window=spec.window, q_offset=pos,
+                                     kv_len=pos + 1)
+    else:
+        out = attn_lib.attention(q, k, v, causal=spec.causal,
+                                 window=spec.window)
+        if mode == "prefill":
+            s = x.shape[1]
+            horizon = max(cache_len or s, s)
+            lc = min(spec.window, horizon) if spec.window else horizon
+            if s >= lc:                      # keep last lc, ring-aligned
+                kk, vv = k[:, -lc:], v[:, -lc:]
+                shift = s % lc
+                if shift:
+                    kk = jnp.roll(kk, shift, axis=1)
+                    vv = jnp.roll(vv, shift, axis=1)
+            else:                            # room for future decode steps
+                kk, vv = _pad_seq(k, lc), _pad_seq(v, lc)
+            new_cache = {"attn": {"k": kk, "v": vv}}
+    return x + jnp.einsum("bshe,hed->bsd", out, cast(p["wo"])), new_cache
+
+
+def _mla_block(x, p, spec, cfg, mode, cache, pos, cache_len=None):
+    h = _norm(x, p["ln"], cfg)
+    dh, dr = cfg.head_dim, cfg.rope_dim
+    q = jnp.einsum("bsd,dhe->bshe", h, cast(p["wq"]))
+    qn, qr = q[..., :dh], q[..., dh:]
+    ckv = jnp.einsum("bsd,dl->bsl", h, cast(p["w_dkv"]))
+    ckv = rms_norm(ckv, p["kv_ln"]["scale"])
+    kr = jnp.einsum("bsd,dr->bsr", h, cast(p["w_kr"]))
+
+    if mode == "decode":
+        positions = jnp.full((1,), pos)
+    else:
+        positions = jnp.arange(x.shape[1])
+    cos, sin = rotary_cos_sin(positions, dr, cfg.rope_base)
+    qr = apply_rotary(qr, cos, sin)
+    kr = apply_rotary(kr[:, :, None, :], cos, sin)[:, :, 0]
+
+    new_cache = None
+    if mode == "decode":
+        c = {"ckv": jax.lax.dynamic_update_slice_in_dim(
+                 cache["attn"]["ckv"], ckv, pos, 1),
+             "kr": jax.lax.dynamic_update_slice_in_dim(
+                 cache["attn"]["kr"], kr, pos, 1)}
+        new_cache = {"attn": c}
+        ckv_all, kr_all = c["ckv"], c["kr"]
+        kv_len = pos + 1
+    else:
+        ckv_all, kr_all = ckv, kr
+        kv_len = None
+        if mode == "prefill":
+            horizon = max(cache_len or x.shape[1], x.shape[1])
+            new_cache = {"attn": {"ckv": _pad_seq(ckv, horizon),
+                                  "kr": _pad_seq(kr, horizon)}}
+
+    k_nope = jnp.einsum("bsl,lhe->bshe", ckv_all, cast(p["w_uk"]))
+    val = jnp.einsum("bsl,lhe->bshe", ckv_all, cast(p["w_uv"]))
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
+                                  k_nope.shape[:3] + (dr,))], -1)
+    qq = jnp.concatenate([qn, qr], -1)
+    out = attn_lib.attention(qq, k, val, causal=True,
+                             q_offset=pos if mode == "decode" else 0,
+                             kv_len=kv_len)
+    return x + jnp.einsum("bshe,hed->bsd", out, cast(p["wo"])), new_cache
+
+
+def _rec_block(x, p, cfg, mode, cache, pos):
+    h = _norm(x, p["ln"], cfg)
+    xb = jnp.einsum("bsd,dw->bsw", h, cast(p["wx"]))
+    gate = jnp.einsum("bsd,dw->bsw", h, cast(p["wgate"]))
+    conv_state = cache["rec"]["conv"] if mode == "decode" else None
+    xc, conv_new = causal_conv1d(xb, p["conv_w"], conv_state)
+    r = jnp.einsum("bsw,wv->bsv", xc, cast(p["wr"]))
+    i = jnp.einsum("bsw,wv->bsv", xc, cast(p["wi"]))
+    if mode == "decode":
+        y, h_last = rg_lru_step(xc, r, i, p["lam"], cache["rec"]["h"])
+    else:
+        y, h_last = rg_lru(xc, r, i, p["lam"])
+    out = jnp.einsum("bsw,wd->bsd", jax.nn.gelu(gate) * y, cast(p["wout"]))
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"rec": {"h": h_last, "conv": conv_new.astype(
+            cache["rec"]["conv"].dtype if cache else jnp.bfloat16)}}
+    return x + out, new_cache
+
+
+def _ssd_block(x, p, cfg, mode, cache, pos):
+    s = cfg.ssm
+    h = _norm(x, p["ln"], cfg)
+    xs = jnp.einsum("bsd,di->bsi", h, cast(p["wx"]))
+    z = jnp.einsum("bsd,di->bsi", h, cast(p["wz"]))
+    bc = jnp.einsum("bsd,dg->bsg", h, cast(p["wbc"]))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", h, cast(p["wdt"])).astype(jnp.float32)
+        + p["dt_bias"]).astype(x.dtype)
+
+    conv_in = jnp.concatenate([xs, bc], -1)
+    conv_state = cache["ssd"]["conv"] if mode == "decode" else None
+    conv_out, conv_new = causal_conv1d(conv_in, p["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    di = s.d_inner
+    gn = s.n_groups * s.d_state
+    xss = conv_out[..., :di].reshape(x.shape[0], x.shape[1],
+                                     s.n_heads, s.head_dim)
+    b = conv_out[..., di:di + gn].reshape(x.shape[0], x.shape[1],
+                                          s.n_groups, s.d_state)
+    c = conv_out[..., di + gn:].reshape(x.shape[0], x.shape[1],
+                                        s.n_groups, s.d_state)
+    if mode == "decode":
+        y, state = ssd_decode_step(xss, dt, p["a_log"], b, c, p["d_skip"],
+                                   cache["ssd"]["state"])
+    else:
+        y, state = ssd_chunked(xss, dt, p["a_log"], b, c, p["d_skip"], s)
+    y = y.reshape(x.shape[0], x.shape[1], di)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_ln"]["scale"])
+    out = jnp.einsum("bsi,id->bsd", y, cast(p["wout"]))
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"ssd": {"state": state,
+                             "conv": conv_new.astype(jnp.bfloat16)}}
+    return x + out, new_cache
+
+
+def _cross_block(x, p, cfg, mode, cache, enc_out):
+    h = _norm(x, p["ln"], cfg)
+    q = jnp.einsum("bsd,dhe->bshe", h, cast(p["wq"]))
+    if mode == "decode":
+        k, v = cache["cross"]["k"], cache["cross"]["v"]
+        new_cache = {"cross": cache["cross"]}
+    else:
+        k = jnp.einsum("bsd,dhe->bshe", enc_out, cast(p["wk"]))
+        v = jnp.einsum("bsd,dhe->bshe", enc_out, cast(p["wv"]))
+        new_cache = ({"cross": {"k": k, "v": v}} if mode == "prefill"
+                     else None)
+    out = attn_lib.attention(q, k, v, causal=False)
+    return x + jnp.einsum("bshe,hed->bsd", out, cast(p["wo"])), new_cache
+
+
+def _ffn(x, p, kind, cfg):
+    h = _norm(x, p["ln"], cfg)
+    if kind == "gelu":
+        y = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, cast(p["wi"])))
+    else:
+        y = (jax.nn.silu(jnp.einsum("bsd,df->bsf", h, cast(p["wg"])))
+             * jnp.einsum("bsd,df->bsf", h, cast(p["wi"])))
+    return x + jnp.einsum("bsf,fd->bsd", y, cast(p["wo"]))
+
+
+def apply_block(x, p, spec: BlockSpec, cfg: ArchConfig, *, mode: str,
+                cache=None, pos=None, enc_out=None, cache_len=None):
+    new_cache: Dict[str, Any] = {}
+    if spec.mixer == "gqa":
+        x, nc = _gqa_block(x, p["attn"], spec, cfg, mode, cache, pos,
+                           cache_len)
+    elif spec.mixer == "mla":
+        x, nc = _mla_block(x, p["attn"], spec, cfg, mode, cache, pos,
+                           cache_len)
+    elif spec.mixer == "rec":
+        x, nc = _rec_block(x, p["rec"], cfg, mode, cache, pos)
+    elif spec.mixer == "ssd":
+        x, nc = _ssd_block(x, p["ssd"], cfg, mode, cache, pos)
+    else:
+        nc = None
+    if nc:
+        new_cache.update(nc)
+    if spec.cross:
+        x, nc = _cross_block(x, p["cross"], cfg, mode, cache, enc_out)
+        if nc:
+            new_cache.update(nc)
+    if spec.ffn == "moe":
+        h = _norm(x, p["moe"]["ln"], cfg)
+        x = x + moe_ffn(h, p["moe"], cfg.moe)
+    elif spec.ffn in ("dense", "gelu"):
+        x = _ffn(x, p["mlp"], spec.ffn, cfg)
+    return x, (new_cache or None)
+
+
+# ---------------------------------------------------------------------------
+# Stage / model forward
+# ---------------------------------------------------------------------------
+
+def _constrain(x, act_sharding):
+    if act_sharding is not None:
+        return jax.lax.with_sharding_constraint(x, act_sharding)
+    return x
+
+
+def run_stage(x, stage_p, stage: Stage, cfg: ArchConfig, *, mode: str,
+              cache=None, pos=None, enc_out=None, remat: bool = True,
+              cache_len=None, act_sharding=None):
+    def unit_fn(x, per_unit):
+        p_unit, c_unit = per_unit
+        ncs = []
+        for i, spec in enumerate(stage.unit):
+            x, nc = apply_block(x, p_unit[i], spec, cfg, mode=mode,
+                                cache=None if c_unit is None else c_unit[i],
+                                pos=pos, enc_out=enc_out,
+                                cache_len=cache_len)
+            x = _constrain(x, act_sharding)
+            ncs.append(nc)
+        return x, tuple(ncs)
+
+    fn = jax.checkpoint(unit_fn) if (mode == "train" and remat) else unit_fn
+    xs = (stage_p, cache)
+    x, new_caches = jax.lax.scan(fn, x, xs)
+    return x, new_caches
+
+
+def _embed(params, cfg, tokens):
+    return cast(params["embed"])[tokens]
+
+
+def _logits(params, cfg, x):
+    x = _norm(x, params["final_norm"], cfg)
+    w = params["embed"] if cfg.tied_embeddings else params["head"]
+    if cfg.tied_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, cast(w))
+    return jnp.einsum("bsd,dv->bsv", x, cast(w))
+
+
+def _run_encoder(params, cfg, enc_embeds):
+    x = enc_embeds + cast(sinusoidal_positions(enc_embeds.shape[1],
+                                               cfg.d_model))[None]
+    enc_spec = Stage((BlockSpec(mixer="gqa", ffn="gelu", causal=False),),
+                     cfg.n_enc_layers)
+    x, _ = run_stage(x, params["enc_stages"][0], enc_spec, cfg,
+                     mode="encode", remat=False)
+    return _norm(x, params["enc_norm"], cfg)
+
+
+def forward(params, cfg: ArchConfig, *, tokens=None, prefix_embeds=None,
+            enc_embeds=None, mode: str = "train", cache=None, pos=None,
+            remat: bool = True, cache_len=None, act_sharding=None):
+    """Unified forward.
+
+    train:   tokens (B,S[-P]) [+ prefix/enc embeds] -> logits (B,S,Vp)
+    prefill: same inputs -> (logits, cache)
+    decode:  tokens (B,1), cache, pos -> (logits (B,1,Vp), cache)
+
+    act_sharding: optional NamedSharding for (B,S,D) activations,
+    re-asserted at every block boundary (keeps GSPMD from drifting to
+    batch-replicated layouts inside the layer scan).
+    """
+    enc_out = None
+    if cfg.kind == "encdec" and mode != "decode":
+        enc_out = _run_encoder(params, cfg, cast(enc_embeds))
+
+    x = _embed(params, cfg, tokens)
+    x = _constrain(x, act_sharding)
+    if prefix_embeds is not None and mode != "decode":
+        x = jnp.concatenate([cast(prefix_embeds), x], axis=1)
+    if cfg.kind == "encdec":
+        if mode == "decode":
+            posv = jnp.full((1,), pos)
+        else:
+            posv = jnp.arange(x.shape[1])
+        x = x + cast(sinusoidal_at(posv, cfg.d_model))[None]
+
+    new_caches = []
+    for si, st in enumerate(cfg.stages):
+        x, nc = run_stage(
+            x, params["stages"][si], st, cfg, mode=mode,
+            cache=None if cache is None else cache[si], pos=pos,
+            enc_out=enc_out, remat=remat, cache_len=cache_len,
+            act_sharding=act_sharding)
+        new_caches.append(nc)
+
+    if mode == "prefill":
+        # only the last position's logits are consumed (next-token);
+        # skipping the full (B,S,V) head matmul saves 2*S*D*V flops and
+        # the matching HBM traffic per prefill (SPerf global fix)
+        return _logits(params, cfg, x[:, -1:]), tuple(new_caches)
+    logits = _logits(params, cfg, x)
+    if mode == "train":
+        return logits
+    return logits, tuple(new_caches)

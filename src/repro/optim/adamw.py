@@ -1,0 +1,64 @@
+"""AdamW with fp32 master state over bf16/fp32 params (pure pytree ops —
+no optax offline).  The optimizer state shards exactly like the params
+(FSDP x TP), since every op is elementwise."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros32, params),
+            "v": jax.tree.map(zeros32, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def adamw_update(params, grads, opt_state, lr, cfg: AdamWConfig
+                 ) -> Tuple[Any, Dict[str, Any], jnp.ndarray]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = opt_state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_ = b1 * m + (1 - b1) * g32
+        v_ = b2 * v + (1 - b2) * g32 * g32
+        mh = m_ / (1 - b1 ** step.astype(jnp.float32))
+        vh = v_ / (1 - b2 ** step.astype(jnp.float32))
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                            + cfg.weight_decay * p32)
+        return p_new.astype(p.dtype), m_, v_
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm

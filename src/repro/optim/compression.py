@@ -1,0 +1,46 @@
+"""Int8 error-feedback gradient compression for slow (cross-pod) links.
+
+Per-tensor symmetric int8 quantisation with an error-feedback residual:
+the quantisation error of step t is added back to the gradient of step
+t+1, which keeps SGD/Adam convergence (Karimireddy et al., 2019).  Used
+by launch/train.py around the cross-pod gradient reduction: the 'pod'
+axis all-reduce moves 4x fewer bytes (int8 vs fp32); the in-pod
+reduction stays full precision.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_update(grad: jnp.ndarray, residual: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(grad, residual) -> (q, scale, new_residual).  The caller reduces q
+    across the slow axis, decompresses, and carries new_residual."""
+    corrected = grad.astype(jnp.float32) + residual
+    q, scale = compress_int8(corrected)
+    new_residual = corrected - decompress_int8(q, scale)
+    return q, scale, new_residual
+
+
+def compress_pytree(grads, residuals):
+    qs, scales, new_res = {}, {}, {}
+    flat, treedef = jax.tree.flatten(grads)
+    rflat = treedef.flatten_up_to(residuals)
+    out = [ef_compress_update(g, r) for g, r in zip(flat, rflat)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]),
+            treedef.unflatten([o[2] for o in out]))

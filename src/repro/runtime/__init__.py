@@ -1,0 +1,2 @@
+from .recovery import (ElasticPlan, HeartbeatMonitor, StragglerPolicy,
+                       TrainSupervisor, derive_elastic_mesh)

@@ -1,0 +1,64 @@
+"""Semantic equivalence: the CIM-mapped executor vs lax.conv oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ArrayConfig, ConvLayerSpec, conv1d, map_layer
+from repro.cnn import cim_conv2d, reference_conv2d
+
+RNG = np.random.RandomState(0)
+
+
+def _check(layer, alg, arr=ArrayConfig(512, 512), **kw):
+    m = map_layer(layer, arr, alg, **kw)
+    g = m.group
+    ic_g = layer.ic // g
+    x = jnp.asarray(RNG.randn(2, layer.ic, layer.i_h, layer.i_w),
+                    jnp.float32)
+    k = jnp.asarray(RNG.randn(layer.k_h, layer.k_w, ic_g, layer.oc),
+                    jnp.float32)
+    pruned = sum(t.pruned_channels for t in m.tiles)
+    if pruned:
+        k = k.at[:, :, ic_g - pruned:, :].set(0.0)
+    y = cim_conv2d(m, x, k)
+    ref = reference_conv2d(layer, x, k, groups=g)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=1e-3, rtol=1e-3)
+    return m
+
+
+@pytest.mark.parametrize("alg", ["img2col", "SDK", "VW-SDK", "Tetris-SDK",
+                                 "TetrisG-SDK"])
+def test_equivalence_all_algorithms(alg):
+    _check(ConvLayerSpec("t", 18, 18, 3, 3, 24, 32), alg)
+
+
+def test_equivalence_pruned_tile():
+    m = _check(ConvLayerSpec("t", 18, 18, 3, 3, 32, 32), "Tetris-SDK")
+    assert any(t.pruned_channels for t in m.tiles)
+
+
+def test_equivalence_multi_tile():
+    _check(ConvLayerSpec("t", 7, 7, 3, 3, 64, 64), "Tetris-SDK")
+
+
+@pytest.mark.parametrize("alg", ["img2col", "VW-SDK", "Tetris-SDK"])
+def test_equivalence_stride2(alg):
+    _check(ConvLayerSpec("t", 10, 10, 3, 3, 8, 8, stride=2), alg,
+           ArrayConfig(128, 128))
+    _check(ConvLayerSpec("t", 13, 13, 3, 3, 4, 4, stride=2), alg,
+           ArrayConfig(96, 96))
+
+
+def test_equivalence_depthwise():
+    _check(ConvLayerSpec("t", 10, 10, 3, 3, 16, 16, groups=16),
+           "Tetris-SDK", ArrayConfig(128, 128))
+
+
+def test_equivalence_conv1d():
+    _check(conv1d("t", 32, 4, 8, 8), "Tetris-SDK", ArrayConfig(128, 128))
+
+
+def test_equivalence_5x5_kernel():
+    _check(ConvLayerSpec("t", 12, 12, 5, 5, 16, 32), "Tetris-SDK",
+           ArrayConfig(256, 256))

@@ -1,0 +1,133 @@
+"""Paper-anchor and invariant tests for the TetrisG-SDK mapping core."""
+import math
+
+import pytest
+
+from repro.core import (ALGORITHMS, ArrayConfig, ConvLayerSpec, MacroGrid,
+                        Window, conv1d, grid_search, map_layer, map_net,
+                        networks)
+from repro.core import cycles as cyc
+from repro.core.tetris import (depth_optimal_tile, factor_pairs_square_first,
+                               square_inclined)
+
+ARR = ArrayConfig(512, 512)
+
+
+# ---------------------------------------------------------------------------
+# exact anchors from the paper
+# ---------------------------------------------------------------------------
+
+def test_vw_sdk_cnn8_matches_table1():
+    net = map_net("cnn8", networks.cnn8(), ARR, "VW-SDK")
+    assert net.total_cycles == 128            # Table I
+    per_layer = [m.cycles for m in net.layers]
+    assert per_layer == [32, 48, 14, 15, 15, 4]
+
+
+def test_tetris_sdk_cnn8_matches_table1():
+    net = map_net("cnn8", networks.cnn8(), ARR, "Tetris-SDK")
+    assert net.total_cycles == 116            # Table I
+    assert [m.cycles for m in net.layers] == [32, 38, 14, 14, 14, 4]
+
+
+def test_tetrisg_sdk_cnn8_matches_table1():
+    net = map_net("cnn8", networks.cnn8(), ARR, "TetrisG-SDK")
+    assert net.total_cycles == 84             # Table I
+
+
+def test_fig12_cnn8_layer3_vw_48_tetris_38():
+    layer = networks.cnn8()[1]                # CNN8-3
+    assert map_layer(layer, ARR, "VW-SDK").cycles == 48
+    m = map_layer(layer, ARR, "Tetris-SDK").cycles
+    assert m == 38                            # Fig 12 worked example
+    # and the depth-optimal remainder is the paper's 6x6 @14ch (prune 1)
+    t = map_layer(layer, ARR, "Tetris-SDK").tiles[-1]
+    assert (t.window.pw_w, t.window.pw_h) in ((6, 6),)
+    assert t.depth == 14 and t.pruned_channels == 1
+
+
+def test_alg5_worked_example_cnn8_layer5():
+    layer = networks.cnn8()[3]                # CNN8-5: 7x7, 3x64x64
+    m = map_layer(layer, ARR, "Tetris-SDK")
+    # paper: two 24-ch tiles (7x3) + one 16-ch depth-optimal tile (6x4)
+    depths = sorted(t.depth for t in m.tiles)
+    assert depths == [16, 48]
+    rem = [t for t in m.tiles if t.depth == 16][0]
+    assert {rem.window.pw_w, rem.window.pw_h} == {4, 6}
+
+
+def test_mobilenet_depthwise_finding():
+    """SIV-C3: depthwise+pointwise mixtures leave nothing for grouping —
+    TetrisG == Tetris == VW-SDK on MobileNet."""
+    ls = networks.mobilenet()
+    cc = {a: map_net("mbn", ls, ARR, a).total_cycles
+          for a in ("VW-SDK", "Tetris-SDK", "TetrisG-SDK")}
+    assert cc["VW-SDK"] == cc["Tetris-SDK"] == cc["TetrisG-SDK"]
+
+
+# ---------------------------------------------------------------------------
+# ordering invariants (hold for every network in the suite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("netname", ["cnn8", "inception", "densenet40",
+                                     "mobilenet"])
+def test_algorithm_ordering(netname):
+    ls = networks.NETWORKS[netname]()
+    cc = {a: map_net(netname, ls, ARR, a).total_cycles
+          for a in ALGORITHMS}
+    # the paper's headline ordering
+    assert cc["Tetris-SDK"] <= cc["VW-SDK"] <= cc["img2col"] * 10
+    assert cc["TetrisG-SDK"] <= cc["Tetris-SDK"]
+    assert cc["VWC-SDK"] <= cc["VW-SDK"]
+
+
+def test_macro_grid_monotone():
+    """More macros never cost more cycles (Alg 2, Fig 20)."""
+    ls = networks.cnn8()
+    arr = ArrayConfig(64, 64)
+    prev = math.inf
+    for p in (1, 2, 4, 8):
+        best = grid_search("cnn8", ls, arr, p_max=p,
+                           algorithm="Tetris-SDK").best.total_cycles
+        assert best <= prev
+        prev = best
+
+
+def test_grid_search_reduces_to_eq5():
+    ls = networks.cnn8()
+    single = map_net("cnn8", ls, ARR, "Tetris-SDK").total_cycles
+    g = grid_search("cnn8", ls, ARR, p_max=1,
+                    algorithm="Tetris-SDK").best.total_cycles
+    assert g == single
+
+
+# ---------------------------------------------------------------------------
+# window arithmetic
+# ---------------------------------------------------------------------------
+
+def test_square_inclined_prefers_square():
+    layer = ConvLayerSpec("t", 20, 20, 3, 3, 16, 16)
+    w = square_inclined(layer, ARR, Window(10, 4))   # 8x2=16 conv
+    n_before = Window(10, 4).positions(3, 3)
+    assert w.positions(3, 3) == n_before
+    assert w.rows(1) <= Window(10, 4).rows(1)
+    assert abs(w.pw_w - w.pw_h) <= abs(10 - 4)
+
+
+def test_marginal_windows_cover_exactly():
+    layer = ConvLayerSpec("t", 18, 18, 3, 3, 32, 32)
+    n_reg, margs = cyc.n_windows(layer, Window(5, 6), marginal=True)
+    assert n_reg == 20 and sum(m.count for m in margs) == 2  # Fig 12
+
+
+def test_conv1d_maps():
+    m = map_layer(conv1d("c1d", 64, 4, 16, 16), ArrayConfig(256, 256),
+                  "Tetris-SDK")
+    assert m.cycles > 0
+
+
+def test_utilization_bounds():
+    for layer in networks.cnn8():
+        for alg in ALGORITHMS:
+            m = map_layer(layer, ARR, alg)
+            assert 0.0 < m.utilization <= 1.0

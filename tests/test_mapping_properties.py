@@ -1,0 +1,92 @@
+"""Hypothesis property tests: invariants of the mapping framework over
+random layers/arrays."""
+import math
+
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core import (ArrayConfig, ConvLayerSpec, MacroGrid, Window,
+                        map_layer)
+from repro.core import cycles as cyc
+from repro.cnn.cim_conv import window_placements
+
+
+layer_st = st.builds(
+    lambda i, k, ic, oc: ConvLayerSpec("h", i, i, k, k, ic, oc),
+    i=st.integers(5, 24),
+    k=st.sampled_from([1, 3, 5]),
+    ic=st.integers(1, 48),
+    oc=st.integers(1, 64),
+).filter(lambda l: l.i_w >= l.k_w)
+
+array_st = st.builds(ArrayConfig,
+                     ar=st.sampled_from([64, 128, 256, 512]),
+                     ac=st.sampled_from([64, 128, 256, 512]))
+
+
+@settings(max_examples=60, deadline=None)
+@given(layer=layer_st, array=array_st)
+def test_tetris_never_worse_than_vw(layer, array):
+    assume(layer.k_w * layer.k_h <= array.ar)
+    vw = map_layer(layer, array, "VW-SDK").cycles
+    tt = map_layer(layer, array, "Tetris-SDK").cycles
+    assert tt <= vw
+
+
+@settings(max_examples=60, deadline=None)
+@given(layer=layer_st, array=array_st)
+def test_tetrisg_never_worse_than_tetris(layer, array):
+    assume(layer.k_w * layer.k_h <= array.ar)
+    tt = map_layer(layer, array, "Tetris-SDK").cycles
+    tg = map_layer(layer, array, "TetrisG-SDK").cycles
+    assert tg <= tt
+
+
+@settings(max_examples=60, deadline=None)
+@given(layer=layer_st, array=array_st,
+       r=st.integers(1, 4), c=st.integers(1, 4))
+def test_multi_macro_never_worse(layer, array, r, c):
+    assume(layer.k_w * layer.k_h <= array.ar)
+    single = map_layer(layer, array, "Tetris-SDK").cycles
+    multi = map_layer(layer, array, "Tetris-SDK",
+                      grid=MacroGrid(r, c)).cycles
+    assert multi <= single
+
+
+@settings(max_examples=80, deadline=None)
+@given(layer=layer_st, array=array_st)
+def test_placement_coverage(layer, array):
+    """Every output position is produced by at least one window load —
+    the structural correctness property behind the conv equivalence."""
+    assume(layer.k_w * layer.k_h <= array.ar)
+    m = map_layer(layer, array, "Tetris-SDK", max_prune=0)
+    covered = set()
+    for tile in m.tiles:
+        for (y, x, ph, pw) in window_placements(layer, tile):
+            for oy in range(y, y + ph - layer.k_h + 1):
+                for ox in range(x, x + pw - layer.k_w + 1):
+                    covered.add((oy, ox))
+    want = {(oy, ox) for oy in range(layer.o_h) for ox in range(layer.o_w)}
+    assert want <= covered
+
+
+@settings(max_examples=100, deadline=None)
+@given(i=st.integers(3, 64), pw=st.integers(3, 64), k=st.sampled_from([1, 3, 5]))
+def test_window_count_forms_agree_when_divisible(i, pw, k):
+    assume(k <= pw <= i)
+    lo = cyc.axis_leftover(i, pw, k)
+    nf = cyc.axis_windows_floor(i, pw, k)
+    nc = cyc.axis_windows_ceil(i, pw, k)
+    if lo == 0:
+        assert nf == nc
+    else:
+        assert nc >= nf
+
+
+@settings(max_examples=60, deadline=None)
+@given(layer=layer_st, array=array_st)
+def test_cycles_positive_and_utilization_bounded(layer, array):
+    assume(layer.k_w * layer.k_h <= array.ar)
+    m = map_layer(layer, array, "Tetris-SDK")
+    assert m.cycles >= 1
+    assert 0 < m.utilization <= 1.0

@@ -1,0 +1,60 @@
+"""CIM simulator behaviours the paper reports (directional claims)."""
+import pytest
+
+from repro.core import ArrayConfig, MacroGrid, grid_search, map_net, networks
+from repro.core.simulator import TechConfig, chip_area, macro_area, simulate
+
+ARR = ArrayConfig(512, 512)
+
+
+def _sim(net, alg, **kw):
+    return simulate(map_net(net, networks.NETWORKS[net](), ARR, alg, **kw))
+
+
+def test_tetrisg_beats_vwc_on_all_networks():
+    """Fig 17 direction: lower latency AND energy for every benchmark."""
+    for net in ("cnn8", "inception", "densenet40"):
+        kw = {"groups": (1, 2)} if net != "cnn8" else {}
+        g = _sim(net, "TetrisG-SDK", **kw)
+        v = _sim(net, "VWC-SDK")
+        assert g.latency_s < v.latency_s, net
+        assert g.energy_j < v.energy_j, net
+        assert g.edap < v.edap, net
+
+
+def test_img2col_worst_edap():
+    for net in ("cnn8", "inception"):
+        i = _sim(net, "img2col")
+        g = _sim(net, "TetrisG-SDK")
+        assert g.edap < i.edap
+
+
+def test_area_scales_with_budget():
+    t = TechConfig()
+    a1 = chip_area(ARR, MacroGrid(1, 1), t)
+    a8 = chip_area(ARR, MacroGrid(4, 2), t)
+    # constant terms (global buffer, misc) dilute the per-macro scaling
+    assert 4 * a1 < a8 < 8.5 * a1
+
+
+def test_power_gating_fig20():
+    """SIV-E: under the same macro budget, grouping reduces EDAP via
+    fewer cycles and fewer *active* macros."""
+    arr = ArrayConfig(64, 64)
+    ls = networks.cnn8()
+    for p in (4, 8):
+        g = grid_search("cnn8", ls, arr, p_max=p,
+                        algorithm="TetrisG-SDK", groups=(1, 2, 4))
+        t = grid_search("cnn8", ls, arr, p_max=p,
+                        algorithm="Tetris-SDK")
+        sg, st_ = simulate(g.best), simulate(t.best)
+        assert sg.edap < st_.edap
+        reduction = 1 - sg.edap / st_.edap
+        assert reduction > 0.3          # paper reports 36-70 %
+
+
+def test_energy_breakdown_positive():
+    m = _sim("cnn8", "Tetris-SDK")
+    for l in m.layers:
+        for k in ("array", "adc", "accum", "buffer", "interconnect"):
+            assert l.breakdown[k] > 0
