@@ -1,0 +1,69 @@
+"""Search-speed benchmark: map_net + Alg 2 grid_search wall time, cached
+(memoized/vectorized, core/memo.py) vs uncached (scalar reference loops),
+so search-cost regressions surface in the BENCH trajectory alongside
+kernel numbers.
+
+The headline row is ``search/grid_search/densenet40/p16`` — the repo's
+acceptance anchor is cached >= 5x faster than uncached with identical
+chosen grids and cycle counts.  The full uncached densenet40 sweep takes
+minutes, so quick mode measures the uncached side on a reduced budget
+and reports the extrapolated ratio; ``--full`` times the real thing and
+asserts result identity.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import ArrayConfig, grid_search, map_net, networks
+from repro.core import memo
+from repro.core.macro_grid import candidate_grids
+
+from .common import Row, timed
+
+NETS = ("cnn8", "inception", "densenet40")
+P_MAX = 16
+
+
+def _grid_search_pair(net: str, p_max_uncached: int):
+    """(cached us, uncached us/grid, results) for one network."""
+    layers = networks.NETWORKS[net]()
+    arr = ArrayConfig(512, 512)
+    memo.clear()
+    cached, us_cached = timed(grid_search, net, layers, arr, P_MAX)
+    t0 = time.perf_counter()
+    with memo.disabled():
+        uncached = grid_search(net, layers, arr, p_max_uncached)
+    us_unc = (time.perf_counter() - t0) * 1e6
+    return cached, us_cached, uncached, us_unc
+
+
+def run(full: bool = False):
+    arr = ArrayConfig(512, 512)
+    rows = []
+    for net in NETS:
+        layers = networks.NETWORKS[net]()
+        memo.clear()
+        m, us = timed(map_net, net, layers, arr)
+        rows.append(Row(f"search/map_net/{net}", us,
+                        f"layers={len(layers)};cycles={m.total_cycles}"))
+
+    n_grids = len(candidate_grids(P_MAX))
+    for net in NETS:
+        # uncached budget: full mode pays the whole scalar sweep on every
+        # net; quick mode samples a 3-grid sweep and extrapolates
+        p_unc = P_MAX if full else 2
+        cached, us_c, uncached, us_u = _grid_search_pair(net, p_unc)
+        if full:
+            identical = (cached.best == uncached.best
+                         and cached.per_grid == uncached.per_grid)
+            speedup = us_u / us_c
+            tag = (f"grid={cached.best.grid.r}x{cached.best.grid.c}"
+                   f";cycles={cached.best.total_cycles}"
+                   f";speedup={speedup:.1f}x;identical={identical}")
+        else:
+            est_unc = us_u / len(candidate_grids(p_unc)) * n_grids
+            tag = (f"grid={cached.best.grid.r}x{cached.best.grid.c}"
+                   f";cycles={cached.best.total_cycles}"
+                   f";est_speedup={est_unc / us_c:.1f}x")
+        rows.append(Row(f"search/grid_search/{net}/p{P_MAX}", us_c, tag))
+    return rows

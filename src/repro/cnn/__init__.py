@@ -1,3 +1,5 @@
 # CNN substrate: the paper's benchmark networks in JAX + the CIM-mapped
 # convolution executor (semantic bridge mapping -> compute).
-from .cim_conv import build_weight_matrix, cim_conv2d, reference_conv2d, window_placements
+from .cim_conv import (build_weight_matrix, cim_conv2d, cim_conv2d_jit,
+                       placement_groups, reference_conv2d,
+                       window_placements)

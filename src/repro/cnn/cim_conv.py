@@ -16,16 +16,25 @@ pass writes into its own buffer with *set* semantics (idempotent), and
 buffers accumulate across channel passes (the partial-sum adds of the
 shift-and-add peripheral, Fig 3).
 
-This executor is loop-unrolled host-side (placements are static) and is
-the *reference* path; the TPU performance path is kernels/im2win_conv.py.
+Execution strategy (DESIGN.md §2): placements are *batched* — all window
+loads of one shape in one (channel x oc) pass are gathered into a single
+stacked patch tensor and hit the weight matrix as one batched matmul,
+followed by one vectorized scatter.  The weight matrix is hoisted out of
+the placement loop entirely (it depends only on the window shape).
+Placements stay host-side Python ints, so :func:`cim_conv2d` traces to a
+small, static op graph and :func:`cim_conv2d_jit` can treat the mapping
+as a static argument.  This is the *reference* path; the TPU performance
+path is kernels/im2win_conv.py (``sdk_conv`` consumes the same mapping).
 """
 from __future__ import annotations
 
+import functools
 import math
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import (ConvLayerSpec, LayerMapping, TileMapping)
 
@@ -75,31 +84,47 @@ def window_placements(layer: ConvLayerSpec, tile: TileMapping
     return out
 
 
+def placement_groups(layer: ConvLayerSpec, tile: TileMapping
+                     ) -> Dict[Tuple[int, int], np.ndarray]:
+    """Window placements grouped by congruent shape: {(pw_h, pw_w) ->
+    (N, 2) int array of (y, x) origins}.  All N loads of one shape share
+    one weight matrix and execute as one batched matmul."""
+    groups: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+    for (y, x, ph, pw) in window_placements(layer, tile):
+        groups.setdefault((ph, pw), []).append((y, x))
+    return {shape: np.asarray(org, np.int32)
+            for shape, org in groups.items()}
+
+
 def build_weight_matrix(layer: ConvLayerSpec, kernel: jnp.ndarray,
                         pw_h: int, pw_w: int) -> jnp.ndarray:
     """Shifted-and-duplicated kernel matrix for one window shape (Fig 5).
 
     kernel: (k_h, k_w, ic_t, oc_t) slice ->
     matrix: (ic_t * pw_h * pw_w, n_pos * oc_t); rows are channel-major
-    window pixels, columns enumerate (position, oc).
+    window pixels, columns enumerate (position, oc).  Built as a single
+    scatter — every (position, kernel-pixel) destination is distinct.
     """
     s = layer.stride
     k_h, k_w = layer.k_h, layer.k_w
     ic_t, oc_t = kernel.shape[2], kernel.shape[3]
     py = (pw_h - k_h) // s + 1
     px = (pw_w - k_w) // s + 1
-    W = jnp.zeros((ic_t, pw_h, pw_w, py * px, oc_t), kernel.dtype)
     kt = jnp.transpose(kernel, (2, 0, 1, 3))   # (ic_t, k_h, k_w, oc_t)
-    for iy in range(py):
-        for ix in range(px):
-            p = iy * px + ix
-            W = W.at[:, iy * s:iy * s + k_h, ix * s:ix * s + k_w, p, :].add(kt)
+
+    iy, ix = np.divmod(np.arange(py * px), px)
+    ys = (iy * s)[:, None, None] + np.arange(k_h)[None, :, None]  # (P,kh,1)
+    xs = (ix * s)[:, None, None] + np.arange(k_w)[None, None, :]  # (P,1,kw)
+    p = np.arange(py * px)[:, None, None]
+    W = jnp.zeros((ic_t, pw_h, pw_w, py * px, oc_t), kernel.dtype)
+    W = W.at[:, ys, xs, p, :].set(
+        jnp.broadcast_to(kt[:, None], (ic_t, py * px, k_h, k_w, oc_t)))
     return W.reshape(ic_t * pw_h * pw_w, py * px * oc_t)
 
 
-def cim_conv2d(mapping: LayerMapping, x: jnp.ndarray,
-               kernel: jnp.ndarray) -> jnp.ndarray:
-    """Convolve per the mapping.
+def _cim_conv2d_traced(mapping: LayerMapping, x: jnp.ndarray,
+                       kernel: jnp.ndarray) -> jnp.ndarray:
+    """Convolve per the mapping (placement-batched).
 
     x: (batch, ic, i_h, i_w) pre-padded; kernel in lax grouped layout
     (k_h, k_w, ic // G, oc) with G = mapping.group (for G=1 that is the
@@ -111,7 +136,6 @@ def cim_conv2d(mapping: LayerMapping, x: jnp.ndarray,
     s = layer.stride
     b = x.shape[0]
     o_h, o_w = layer.o_h, layer.o_w
-    out = jnp.zeros((b, layer.oc, o_h, o_w), jnp.result_type(x, kernel))
 
     g = mapping.group
     ic_g, oc_g = layer.ic // g, layer.oc // g
@@ -120,37 +144,72 @@ def cim_conv2d(mapping: LayerMapping, x: jnp.ndarray,
         raise ValueError(f"kernel shape {kernel.shape} != grouped layout "
                          f"{(layer.k_h, layer.k_w, ic_g, layer.oc)}")
 
-    for gi in range(g):
-        xg = x[:, gi * ic_g:(gi + 1) * ic_g]
-        kg = kernel[:, :, :, gi * oc_g:(gi + 1) * oc_g]
-        c_base = 0
-        for tile in mapping.tiles:
-            kept = tile.depth        # TileMapping.depth is the KEPT channels
-            placements = window_placements(layer, tile)
-            for c0 in range(c_base, c_base + kept, tile.ic_t):
-                ic_t = min(tile.ic_t, c_base + kept - c0)
-                for o0 in range(0, oc_g, tile.oc_t):
-                    oc_t = min(tile.oc_t, oc_g - o0)
-                    # one channel x oc pass: set-semantics buffer
-                    buf = jnp.zeros((b, oc_t, o_h, o_w), out.dtype)
-                    for (y, x0, pw_h, pw_w) in placements:
-                        Wm = build_weight_matrix(
-                            layer, kg[:, :, c0:c0 + ic_t, o0:o0 + oc_t],
-                            pw_h, pw_w)
-                        patch = jax.lax.dynamic_slice(
-                            xg, (0, c0, y, x0), (b, ic_t, pw_h, pw_w))
-                        flat = patch.reshape(b, ic_t * pw_h * pw_w)
-                        prod = flat @ Wm              # (b, n_pos*oc_t)
-                        py = (pw_h - layer.k_h) // s + 1
-                        px = (pw_w - layer.k_w) // s + 1
-                        prod = prod.reshape(b, py, px, oc_t)
-                        prod = jnp.transpose(prod, (0, 3, 1, 2))
-                        buf = jax.lax.dynamic_update_slice(
-                            buf, prod, (0, 0, y // s, x0 // s))
-                    out = out.at[:, gi * oc_g + o0:gi * oc_g + o0 + oc_t
-                                 ].add(buf)
-            c_base += tile.depth
-    return out
+    # all G groups are congruent (same tiles, same placements): expose the
+    # group axis once and batch it through every gather/matmul/scatter
+    xr = x.reshape(b, g, ic_g, layer.i_h, layer.i_w)
+    kr = kernel.reshape(layer.k_h, layer.k_w, ic_g, g, oc_g)
+    out = jnp.zeros((b, g, oc_g, o_h, o_w), jnp.result_type(x, kernel))
+
+    c_base = 0
+    for tile in mapping.tiles:
+        kept = tile.depth            # TileMapping.depth is the KEPT channels
+        xc = xr[:, :, c_base:c_base + kept]     # (b, g, kept, i_h, i_w)
+        ks = kr[:, :, c_base:c_base + kept]     # (kh, kw, kept, g, oc_g)
+        # one set-semantics buffer per tile: every window (regular or
+        # marginal, any shape) writes the tile's full kept-channel partial
+        # sum, so overlapping windows recompute identical values and set
+        # is idempotent; tiles accumulate into `out`
+        buf = jnp.zeros((b, g, oc_g, o_h, o_w), out.dtype)
+        for (ph, pw), origins in placement_groups(layer, tile).items():
+            # The tile's (ic_t x oc_t) array loads batch into ONE matmul
+            # per group: channel passes stack along the contraction rows
+            # (summing partial products over loads == the shift-and-add
+            # accumulation), oc passes concatenate along columns.
+            Wm = build_weight_matrix(
+                layer, ks.reshape(layer.k_h, layer.k_w, kept, g * oc_g),
+                ph, pw)
+            py = (ph - layer.k_h) // s + 1
+            px = (pw - layer.k_w) // s + 1
+            Wm = Wm.reshape(kept * ph * pw, py * px, g, oc_g)
+            Wm = Wm.transpose(2, 0, 1, 3).reshape(
+                g, kept * ph * pw, py * px * oc_g)
+            ys, xs = origins[:, 0], origins[:, 1]
+            n = len(ys)
+            # gather every congruent placement of every group at once:
+            # (b, g, kept, N, ph, pw)
+            Y = ys[:, None, None] + np.arange(ph)[None, :, None]
+            X = xs[:, None, None] + np.arange(pw)[None, None, :]
+            patches = xc[:, :, :, Y, X]
+            flat = patches.transpose(0, 1, 3, 2, 4, 5).reshape(
+                b, g, n, kept * ph * pw)
+            prod = jnp.einsum("bgnr,grp->bgnp", flat, Wm)
+            prod = prod.reshape(b, g, n, py, px, oc_g)
+            prod = prod.transpose(0, 1, 5, 2, 3, 4)  # (b,g,oc_g,N,py,px)
+            # vectorized scatter with set semantics; duplicate indices
+            # only occur where the recomputed values are identical
+            OY = (ys // s)[:, None, None] + np.arange(py)[None, :, None]
+            OX = (xs // s)[:, None, None] + np.arange(px)[None, None, :]
+            buf = buf.at[:, :, :, OY, OX].set(prod)
+        out = out + buf
+        c_base += tile.depth
+    return out.reshape(b, layer.oc, o_h, o_w)
+
+
+cim_conv2d_jit = functools.partial(jax.jit, static_argnums=0)(
+    _cim_conv2d_traced)
+cim_conv2d_jit.__doc__ = (
+    """jit entry point: the mapping (and with it every placement) is a
+    static argument — LayerMapping is a frozen, hashable dataclass — so
+    each distinct mapping compiles once to a fully fused program.""")
+
+
+def cim_conv2d(mapping: LayerMapping, x: jnp.ndarray,
+               kernel: jnp.ndarray) -> jnp.ndarray:
+    """Convolve per the mapping — see :func:`_cim_conv2d_traced` for the
+    layout contract.  Dispatches through :func:`cim_conv2d_jit`: one XLA
+    compile per distinct (mapping, shapes) instead of per-op eager
+    dispatch of every gather/matmul/scatter."""
+    return cim_conv2d_jit(mapping, x, kernel)
 
 
 def reference_conv2d(layer: ConvLayerSpec, x: jnp.ndarray,

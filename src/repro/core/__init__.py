@@ -12,10 +12,11 @@ from .types import (ArrayConfig, ConvLayerSpec, LayerMapping, MacroGrid,
                     MarginalWindow, NetworkMapping, TileMapping, Window,
                     conv1d)
 from .mapper import ALGORITHMS, grid_search, map_layer, map_net
-from . import networks
+from . import memo, networks
 
 __all__ = [
     "ArrayConfig", "ConvLayerSpec", "LayerMapping", "MacroGrid",
     "MarginalWindow", "NetworkMapping", "TileMapping", "Window", "conv1d",
-    "ALGORITHMS", "grid_search", "map_layer", "map_net", "networks",
+    "ALGORITHMS", "grid_search", "map_layer", "map_net", "memo",
+    "networks",
 ]

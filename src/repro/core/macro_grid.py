@@ -4,7 +4,11 @@ Given a hardware budget of P_max identical macros, enumerate every
 rectangular grid (r, c) with r*c <= P_max, map the whole network per grid
 (re-running the window search — "the window set is resized for a P-macro
 grid"), and keep the grid minimising total CC_multi.  The search is
-offline (O(P_max log P_max) grids) and sub-second for practical budgets.
+offline (O(P_max log P_max) grids) and sub-second for practical budgets:
+the per-layer searches this sweep fans out are memoized under their
+*effective* grid and score candidates against a shared grid-independent
+window table (core/memo.py), so the sweep only pays full search cost for
+distinct effective shapes — see benchmarks/search_bench.py.
 """
 from __future__ import annotations
 

@@ -1,0 +1,121 @@
+"""Search memoization (the "mapping search must scale with mapped
+execution" requirement, VW-SDK / Fast-OverlaPIM).
+
+Two cache levels, both keyed on hashable frozen dataclasses:
+
+* **result cache** — full ``LayerMapping`` results of a per-layer search
+  (``tetris_layer`` / ``vw_sdk`` / ...), keyed by
+  ``(algorithm, layer, array, effective grid, extra kwargs)``.
+* **table cache** — grid-*independent* intermediate work of a search
+  (the vectorized candidate-window score table, cycles.window_table),
+  keyed by ``(layer, array)``.  One macro-grid sweep (Alg 2) re-scores
+  the same candidate set under ~P_max.log(P_max) grids; the table is
+  built once.
+
+Effective grids: a tile's cycle count under grid ``(r, c)`` is
+``n_windows * ceil(ar_c / r) * ceil(ac_c / c)`` with ``ar_c <= IC`` and
+``ac_c <= OC`` for every candidate the searches enumerate, so every grid
+with ``r >= IC`` (resp. ``c >= OC``) yields the *identical* argmin.
+:func:`effective_grid` canonicalises the key; the cached mapping is
+re-stamped with the caller's real grid (`dataclasses.replace`), which is
+bit-identical to searching that grid directly (asserted in
+tests/test_search_cache.py).
+
+``disabled()`` turns the whole layer off (benchmarks time the uncached
+path through it); ``clear()`` + ``stats`` support cache-correctness
+tests and the search_bench module.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+from .types import MacroGrid
+
+_results: Dict[Any, Any] = {}
+_tables: Dict[Any, Any] = {}
+_enabled: bool = True
+_aux_clears: list = []
+
+stats = {"result_hits": 0, "result_misses": 0,
+         "table_hits": 0, "table_misses": 0}
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+def register_cache_clear(fn: Callable[[], None]) -> None:
+    """Hook an auxiliary cache (e.g. an lru_cache) into :func:`clear`."""
+    _aux_clears.append(fn)
+
+
+def clear() -> None:
+    _results.clear()
+    _tables.clear()
+    for fn in _aux_clears:
+        fn()
+    for k in stats:
+        stats[k] = 0
+
+
+@contextlib.contextmanager
+def disabled():
+    """Bypass (and do not populate) both cache levels inside the block."""
+    global _enabled
+    prev = _enabled
+    _enabled = False
+    try:
+        yield
+    finally:
+        _enabled = prev
+
+
+def effective_grid(grid: MacroGrid, ic: int, oc: int) -> MacroGrid:
+    """Clamp a grid to the largest (r, c) that can still change the
+    search outcome for a layer with `ic` input / `oc` output channels."""
+    return MacroGrid(min(grid.r, ic), min(grid.c, oc))
+
+
+def cached_result(key: Tuple, compute: Callable[[], Any]) -> Any:
+    if not _enabled:
+        return compute()
+    try:
+        out = _results[key]
+        stats["result_hits"] += 1
+        return out
+    except KeyError:
+        stats["result_misses"] += 1
+        out = compute()
+        _results[key] = out
+        return out
+
+
+def cached_table(key: Tuple, compute: Callable[[], Any]) -> Any:
+    if not _enabled:
+        return compute()
+    try:
+        out = _tables[key]
+        stats["table_hits"] += 1
+        return out
+    except KeyError:
+        stats["table_misses"] += 1
+        out = compute()
+        _tables[key] = out
+        return out
+
+
+def memoized_search(name: str, layer, array, grid: MacroGrid,
+                    scalar: Callable[[MacroGrid], Any],
+                    vectorized: Callable[[MacroGrid], Any],
+                    extra: Tuple = ()) -> Any:
+    """The per-layer search wrapper every algorithm shares: scalar loop
+    when disabled, else the vectorized search cached under the effective
+    grid, re-stamped with the caller's grid."""
+    if not _enabled:
+        return scalar(grid)
+    eff = effective_grid(grid, layer.ic, layer.oc)
+    m = cached_result((name, layer, array, eff) + tuple(extra),
+                      lambda: vectorized(eff))
+    return m if m.grid == grid else dataclasses.replace(m, grid=grid)

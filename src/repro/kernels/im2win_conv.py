@@ -1,5 +1,20 @@
-"""im2win convolution — the paper's SDK parallel window executed as a
+"""im2win / SDK convolution — the paper's parallel window executed as a
 Pallas kernel (DESIGN.md §2 table).
+
+Two entry points:
+
+* :func:`im2win_conv` — mapping-free NHWC path: picks its own square-
+  inclined window (Alg 3) and runs stride-1 VALID convolution.
+* :func:`sdk_conv` — mapping-*driven* NCHW path: consumes a
+  :class:`LayerMapping` directly.  Per (group, tile) one ``pallas_call``
+  whose grid is ``(AR_c, AC_c, n_windows)`` — the grid size IS the
+  tile's computing-cycle count (ceil form): every grid step is one
+  parallel-window load of one ``ic_t x oc_t`` array pass.  Marginal /
+  border windows execute as border-clamped reads of the regular window
+  shape (overlap-recompute, Alg 4's hardware analogue).  It therefore
+  executes the *same* mapping as the reference executor
+  (cnn/cim_conv.py) and is cross-checked against it in
+  tests/test_sdk_conv.py.
 
 One grid step == one parallel-window load == one computing cycle: the
 grid size IS the paper's cycle count for the layer.  Each step covers a
@@ -17,6 +32,7 @@ marginal-window analogue; the step count matches the ceil form.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional, Tuple
 
 import jax
@@ -25,6 +41,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.tetris import factor_pairs_square_first
+from repro.core.types import LayerMapping
 
 
 def select_window(o_h: int, o_w: int, k: int, c: int, oc: int,
@@ -92,3 +109,149 @@ def im2win_conv(x: jnp.ndarray, w: jnp.ndarray, *,
 def n_cycles(o_h: int, o_w: int, th: int, tw: int, batch: int = 1) -> int:
     """Grid steps == the mapping's computing-cycle count (ceil form)."""
     return batch * pl.cdiv(o_h, th) * pl.cdiv(o_w, tw)
+
+
+# ---------------------------------------------------------------------------
+# Mapping-driven SDK kernel
+# ---------------------------------------------------------------------------
+
+def _tile_passes(mapping: LayerMapping, tile) -> Tuple[int, int, int, int]:
+    """(ic_t, ar_c, oc_t, ac_c) of a tile's sequential array passes, per
+    group.  ``ar_c`` is the MAPPING's stored pass count — for SDK-style
+    tiles whose unrolled window exceeds AR it multiplexes *rows*, not
+    channels, so the executed channel block is re-derived as
+    ``ceil(kept / ar_c)`` to keep grid size == the accounted cycles."""
+    oc_g = mapping.layer.oc // mapping.group
+    kept = tile.depth
+    ar_c = tile.ar_c
+    ic_t = math.ceil(kept / ar_c)
+    oc_t = min(tile.oc_t, oc_g)
+    ac_c = math.ceil(oc_g / oc_t)
+    return ic_t, ar_c, oc_t, ac_c
+
+
+def _tile_grid(layer, tile) -> Tuple[int, int, int, int, int, int]:
+    """(step_y, step_x, ny, nx, lim_y, lim_x) of a tile's ceil-form window
+    raster: `n = ny*nx` border-clamped loads of the regular window shape
+    cover every output position (clamps stay on the stride grid)."""
+    s = layer.stride
+    w = tile.window
+    step_y = ((w.pw_h - layer.k_h) // s + 1) * s
+    step_x = ((w.pw_w - layer.k_w) // s + 1) * s
+    ny = math.ceil(((layer.i_h - layer.k_h) // s + 1) / (step_y // s))
+    nx = math.ceil(((layer.i_w - layer.k_w) // s + 1) / (step_x // s))
+    lim_y = ((layer.i_h - w.pw_h) // s) * s
+    lim_x = ((layer.i_w - w.pw_w) // s) * s
+    return step_y, step_x, ny, nx, lim_y, lim_x
+
+
+def _sdk_kernel(x_ref, w_ref, o_ref, *, s, k_h, k_w, pw_h, pw_w, py, px,
+                step_y, step_x, nx, lim_y, lim_x):
+    """One grid step == one window load of one (ic_t x oc_t) array pass."""
+    wi = pl.program_id(2)
+    y0 = jnp.minimum((wi // nx) * step_y, lim_y)
+    x0 = jnp.minimum((wi % nx) * step_x, lim_x)
+
+    @pl.when(wi == 0)
+    def _init():                     # o block is revisited across windows
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    win = x_ref[:, :, pl.ds(y0, pw_h), pl.ds(x0, pw_w)]
+    b, oc_t = win.shape[0], w_ref.shape[3]
+    acc = jnp.zeros((b * py * px, oc_t), jnp.float32)
+    for dy in range(k_h):            # unrolled shift-matmuls (MXU passes)
+        for dx in range(k_w):
+            patch = win[:, :, dy:dy + (py - 1) * s + 1:s,
+                        dx:dx + (px - 1) * s + 1:s]
+            patch = patch.transpose(0, 2, 3, 1).reshape(b * py * px, -1)
+            acc += jnp.dot(patch, w_ref[dy, dx],
+                           preferred_element_type=jnp.float32)
+    vals = acc.reshape(b, py, px, oc_t).transpose(0, 3, 1, 2)
+    o_ref[0, :, :, pl.ds(y0 // s, py), pl.ds(x0 // s, px)] = \
+        vals.astype(o_ref.dtype)
+
+
+def sdk_conv(mapping: LayerMapping, x: jnp.ndarray, kernel: jnp.ndarray,
+             *, interpret: bool = False) -> jnp.ndarray:
+    """Execute a convolution exactly as `mapping` prescribes, on the MXU.
+
+    Same contract as cnn.cim_conv2d: x (batch, ic, i_h, i_w) pre-padded,
+    kernel (k_h, k_w, ic // G, oc) in lax grouped layout, output
+    (batch, oc, o_h, o_w); pruned channels are skipped.  One pallas_call
+    per (group, tile); within it the grid enumerates the mapping's
+    (channel pass, oc pass, window) loads, so total grid steps ==
+    the mapping's ceil-form cycle count (see sdk_conv_cycles).  Channel /
+    oc passes are padded to whole ``ic_t`` / ``oc_t`` blocks with zero
+    weights (zero partial products), and each channel pass writes its own
+    slot of a leading accumulator axis that is summed on the host — the
+    shift-and-add partial-sum accumulation of Fig 3.
+    """
+    layer = mapping.layer
+    s = layer.stride
+    b = x.shape[0]
+    o_h, o_w = layer.o_h, layer.o_w
+    g = mapping.group
+    ic_g, oc_g = layer.ic // g, layer.oc // g
+    if kernel.shape != (layer.k_h, layer.k_w, ic_g, layer.oc):
+        raise ValueError(f"kernel shape {kernel.shape} != grouped layout "
+                         f"{(layer.k_h, layer.k_w, ic_g, layer.oc)}")
+
+    outs = []
+    for gi in range(g):
+        xg = x[:, gi * ic_g:(gi + 1) * ic_g]
+        kg = kernel[:, :, :, gi * oc_g:(gi + 1) * oc_g]
+        acc = jnp.zeros((b, oc_g, o_h, o_w), jnp.float32)
+        c_base = 0
+        for tile in mapping.tiles:
+            kept = tile.depth
+            ic_t, ar_c, oc_t, ac_c = _tile_passes(mapping, tile)
+            ic_pad, oc_pad = ar_c * ic_t, ac_c * oc_t
+
+            xt = jnp.pad(xg[:, c_base:c_base + kept],
+                         ((0, 0), (0, ic_pad - kept), (0, 0), (0, 0)))
+            kt = jnp.pad(kg[:, :, c_base:c_base + kept],
+                         ((0, 0), (0, 0), (0, ic_pad - kept),
+                          (0, oc_pad - oc_g)))
+
+            w = tile.window
+            py = (w.pw_h - layer.k_h) // s + 1
+            px = (w.pw_w - layer.k_w) // s + 1
+            step_y, step_x, ny, nx, lim_y, lim_x = _tile_grid(layer, tile)
+
+            res = pl.pallas_call(
+                functools.partial(
+                    _sdk_kernel, s=s, k_h=layer.k_h, k_w=layer.k_w,
+                    pw_h=w.pw_h, pw_w=w.pw_w, py=py, px=px,
+                    step_y=step_y, step_x=step_x, nx=nx,
+                    lim_y=lim_y, lim_x=lim_x),
+                grid=(ar_c, ac_c, ny * nx),
+                in_specs=[
+                    pl.BlockSpec((b, ic_t, layer.i_h, layer.i_w),
+                                 lambda ci, oi, wi: (0, ci, 0, 0)),
+                    pl.BlockSpec((layer.k_h, layer.k_w, ic_t, oc_t),
+                                 lambda ci, oi, wi: (0, 0, ci, oi)),
+                ],
+                out_specs=pl.BlockSpec((1, b, oc_t, o_h, o_w),
+                                       lambda ci, oi, wi: (ci, 0, oi, 0, 0)),
+                out_shape=jax.ShapeDtypeStruct(
+                    (ar_c, b, oc_pad, o_h, o_w), jnp.float32),
+                interpret=interpret,
+            )(xt, kt)
+            acc = acc + res.sum(axis=0)[:, :oc_g]
+            c_base += kept
+        outs.append(acc)
+    return jnp.concatenate(outs, axis=1).astype(
+        jnp.result_type(x, kernel))
+
+
+def sdk_conv_cycles(mapping: LayerMapping) -> int:
+    """Total grid steps sdk_conv executes == the mapping's cycle count in
+    the ceil-form convention (tiles with marginal sets run their border
+    loads as clamped regular windows, so floor+marginal counts map to the
+    equivalent ceil raster), times the sequential group count."""
+    total = 0
+    for tile in mapping.tiles:
+        _, _, ny, nx, _, _ = _tile_grid(mapping.layer, tile)
+        _, ar_c, _, ac_c = _tile_passes(mapping, tile)
+        total += ar_c * ac_c * ny * nx
+    return total * mapping.group

@@ -38,6 +38,7 @@ def test_equivalence_pruned_tile():
     assert any(t.pruned_channels for t in m.tiles)
 
 
+@pytest.mark.slow
 def test_equivalence_multi_tile():
     _check(ConvLayerSpec("t", 7, 7, 3, 3, 64, 64), "Tetris-SDK")
 
@@ -50,6 +51,21 @@ def test_equivalence_stride2(alg):
            ArrayConfig(96, 96))
 
 
+@pytest.mark.parametrize("geo", [(11, 3, 2), (9, 3, 3), (15, 3, 2),
+                                 (15, 3, 3), (14, 5, 2)])
+def test_equivalence_strided_border_coverage(geo):
+    """Strided geometries whose border clamp falls off the stride grid:
+    the search must only pick windows (and grow marginal windows) whose
+    stride-aligned clamped raster still reaches the last outputs
+    (cycles.axis_covers / grow_to_cover)."""
+    i, k, s = geo
+    _check(ConvLayerSpec("t", i, i, k, k, 8, 8, stride=s), "Tetris-SDK",
+           ArrayConfig(128, 128))
+    _check(ConvLayerSpec("t", i, i, k, k, 8, 8, stride=s), "VW-SDK",
+           ArrayConfig(128, 128))
+
+
+@pytest.mark.slow
 def test_equivalence_depthwise():
     _check(ConvLayerSpec("t", 10, 10, 3, 3, 16, 16, groups=16),
            "Tetris-SDK", ArrayConfig(128, 128))
@@ -62,3 +78,19 @@ def test_equivalence_conv1d():
 def test_equivalence_5x5_kernel():
     _check(ConvLayerSpec("t", 12, 12, 5, 5, 16, 32), "Tetris-SDK",
            ArrayConfig(256, 256))
+
+
+def test_jit_entry_point_matches():
+    """cim_conv2d_jit treats the mapping as static and must agree with
+    the reference oracle (and hence the un-jitted path)."""
+    from repro.core import map_layer
+    from repro.cnn.cim_conv import cim_conv2d_jit
+
+    layer = ConvLayerSpec("t", 18, 18, 3, 3, 24, 32)
+    m = map_layer(layer, ArrayConfig(512, 512), "Tetris-SDK")
+    x = jnp.asarray(RNG.randn(2, 24, 18, 18), jnp.float32)
+    k = jnp.asarray(RNG.randn(3, 3, 24, 32), jnp.float32)
+    y = cim_conv2d_jit(m, x, k)
+    ref = reference_conv2d(layer, x, k)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=1e-3, rtol=1e-3)

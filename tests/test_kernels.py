@@ -3,6 +3,9 @@ CPU; TPU is the target)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property suite needs hypothesis "
+                    "(optional test dependency, see pyproject.toml)")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref

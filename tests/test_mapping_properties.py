@@ -3,6 +3,9 @@ random layers/arrays."""
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property suite needs hypothesis "
+                    "(optional test dependency, see pyproject.toml)")
 from hypothesis import assume, given, settings, strategies as st
 
 from repro.core import (ArrayConfig, ConvLayerSpec, MacroGrid, Window,

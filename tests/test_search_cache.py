@@ -1,0 +1,95 @@
+"""Memoized + vectorized search == the scalar reference search, bit for
+bit: same windows, tiles, cycles, and chosen grids (DESIGN.md §3)."""
+import random
+
+import pytest
+
+from repro.core import (ArrayConfig, ConvLayerSpec, MacroGrid, grid_search,
+                        map_layer, map_net, networks)
+from repro.core import baselines, memo, tetris
+
+
+def _random_cases(n, seed=3):
+    rng = random.Random(seed)
+    out = []
+    while len(out) < n:
+        i = rng.randint(5, 22)
+        k = rng.choice([1, 3, 5])
+        if i < k:
+            continue
+        layer = ConvLayerSpec("r", i, i, k, k, rng.randint(1, 48),
+                              rng.randint(1, 64),
+                              stride=rng.choice([1, 1, 2]))
+        arr = ArrayConfig(rng.choice([64, 128, 256, 512]),
+                          rng.choice([64, 128, 256, 512]))
+        if k * k > arr.ar:
+            continue
+        grid = MacroGrid(rng.randint(1, 4), rng.randint(1, 4))
+        out.append((layer, arr, grid))
+    return out
+
+
+@pytest.mark.parametrize("search,name", [
+    (tetris.tetris_layer, "tetris"),
+    (baselines.vw_sdk, "vw"),
+    (baselines.sdk, "sdk"),
+    (baselines.vwc_sdk, "vwc"),
+])
+def test_vectorized_matches_scalar(search, name):
+    """The vectorized/memoized path and the scalar first-strictly-better
+    loop must pick identical mappings on random geometries."""
+    for layer, arr, grid in _random_cases(40):
+        memo.clear()
+        fast = search(layer, arr, grid)
+        with memo.disabled():
+            slow = search(layer, arr, grid)
+        assert fast == slow, (name, layer, arr, grid)
+
+
+def test_effective_grid_rebase():
+    """Grids beyond (IC, OC) collapse to one cache entry whose result is
+    re-stamped with the caller's grid — and matches a direct search."""
+    layer = ConvLayerSpec("t", 18, 18, 3, 3, 8, 8)
+    arr = ArrayConfig(256, 256)
+    memo.clear()
+    a = tetris.tetris_layer(layer, arr, MacroGrid(9, 9))
+    b = tetris.tetris_layer(layer, arr, MacroGrid(16, 12))
+    assert memo.stats["result_misses"] >= 1
+    assert a.tiles == b.tiles
+    assert a.grid == MacroGrid(9, 9) and b.grid == MacroGrid(16, 12)
+    with memo.disabled():
+        assert tetris.tetris_layer(layer, arr, MacroGrid(16, 12)) == b
+
+
+def test_grid_search_cache_correctness():
+    """Memoized grid search returns bit-identical mappings, chosen grids
+    and per-grid cycle counts to the uncached path (Alg 2 contract)."""
+    layers = networks.cnn8()
+    arr = ArrayConfig(512, 512)
+    memo.clear()
+    cached = grid_search("cnn8", layers, arr, p_max=6)
+    with memo.disabled():
+        uncached = grid_search("cnn8", layers, arr, p_max=6)
+    assert cached.best == uncached.best
+    assert cached.per_grid == uncached.per_grid
+
+
+def test_cache_hit_counts():
+    layers = networks.cnn8()
+    arr = ArrayConfig(512, 512)
+    memo.clear()
+    map_net("cnn8", layers, arr, "Tetris-SDK")
+    misses = memo.stats["result_misses"]
+    map_net("cnn8", layers, arr, "Tetris-SDK")
+    assert memo.stats["result_misses"] == misses   # second pass all hits
+    assert memo.stats["result_hits"] >= len(layers)
+
+
+def test_paper_numbers_survive_memoization():
+    """Table I anchors: CNN8 Tetris-SDK == 116 total cycles."""
+    memo.clear()
+    m = map_net("cnn8", networks.cnn8(), ArrayConfig(512, 512),
+                "Tetris-SDK")
+    assert m.total_cycles == 116
+    m2 = map_layer(networks.cnn8()[1], ArrayConfig(512, 512), "Tetris-SDK")
+    assert m2.cycles == 38                          # CNN8-3, Fig 12

@@ -11,6 +11,7 @@ from repro.data.synthetic import TokenStream
 from repro.launch.steps import TrainConfig, init_train_state, make_train_step
 
 
+@pytest.mark.slow
 def test_tiny_lm_loss_decreases():
     cfg = get_config("stablelm_1_6b", smoke=True)
     state = init_train_state(cfg, jax.random.PRNGKey(0))
