@@ -1,12 +1,54 @@
 """Fig 20: EDAP of TetrisG-SDK normalized to Tetris-SDK across macro
 budgets P (64x64 macros, Alg 2 grid search).  Paper: best reductions
-70 % (CNN8, P=8), 68 % (Inception, P=2), 36 % (DenseNet40, P=32)."""
+70 % (CNN8, P=8), 68 % (Inception, P=2), 36 % (DenseNet40, P=32).
+
+Since PR 2 this benchmark also *executes* the macro parallelism it
+accounts for: the mapped-network executor (cnn/mapped_net.py) runs the
+best grid's NetworkMapping layer by layer with the macro grid realized
+as vmap/shard_map super-steps, and we report measured wall-clock
+speed-up at p_max in {1, 4, 16} next to the analytical cycle ratio.
+Per-layer executed step counts are asserted equal to
+``LayerMapping.cycles`` for every mapping this file touches (and for
+all four bench networks in the steps-equal-cycles row).
+"""
 from __future__ import annotations
 
-from repro.core import ArrayConfig, grid_search, networks
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ArrayConfig, MacroGrid, grid_search, map_net,
+                        networks)
 from repro.core.simulator import simulate
+from repro.cnn.mapped_net import (assert_steps_match, mapped_conv2d,
+                                  zero_pruned_kernels)
 
 from .common import Row, timed
+
+EXEC_BUDGETS = (1, 4, 16)
+
+
+def _mapped_walltime(net, reps: int = 3) -> float:
+    """us per full mapped-network forward (layer by layer, jit warm)."""
+    rng = np.random.RandomState(0)
+    ks = zero_pruned_kernels(net, [
+        jnp.asarray(rng.randn(m.layer.k_h, m.layer.k_w,
+                              m.layer.ic // m.group, m.layer.oc),
+                    jnp.float32) for m in net.layers])
+    data = [(m, jnp.asarray(
+        rng.randn(1, m.layer.ic, m.layer.i_h, m.layer.i_w), jnp.float32), k)
+        for m, k in zip(net.layers, ks)]
+
+    def run_all():
+        jax.block_until_ready([mapped_conv2d(m, x, k) for m, x, k in data])
+
+    run_all()                                   # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        run_all()
+    return (time.perf_counter() - t0) / reps * 1e6
 
 
 def run(full: bool = False):
@@ -30,4 +72,37 @@ def run(full: bool = False):
                 f"edap_reduction={1 - sg.edap/st.edap:.0%};"
                 f"grid={best.grid.r}x{best.grid.c};"
                 f"active={sg.active_macros}"))
+
+    # --- measured macro parallelism: the executor, not just the count ----
+    exec_nets = ("cnn8", "inception") if full else ("cnn8",)
+    for name in exec_nets:
+        layers = networks.NETWORKS[name]()
+        base_cycles = base_us = None
+        for p in EXEC_BUDGETS:
+            best = grid_search(name, layers, arr, p_max=p,
+                               algorithm="TetrisG-SDK",
+                               groups=(1, 2, 4)).best
+            assert_steps_match(best)            # executed steps == cycles
+            us = _mapped_walltime(best)
+            if p == 1:
+                base_cycles, base_us = best.total_cycles, us
+            rows.append(Row(
+                f"fig20/mapped-exec/{name}/P{p}", us,
+                f"speedup={base_us / us:.2f};"
+                f"cycle_ratio={base_cycles / best.total_cycles:.2f};"
+                f"grid={best.grid.r}x{best.grid.c};"
+                f"cycles={best.total_cycles}"))
+
+    # --- executed-schedule contract on all bench networks ----------------
+    def check_all():
+        n_layers = 0
+        for name, fn in networks.NETWORKS.items():
+            m = map_net(name, fn(), arr, "TetrisG-SDK", MacroGrid(4, 4),
+                        groups=(1, 2))
+            assert_steps_match(m)
+            n_layers += len(m.layers)
+        return n_layers
+    n, us = timed(check_all)
+    rows.append(Row("fig20/steps-equal-cycles", us,
+                    f"networks={len(networks.NETWORKS)};layers={n};ok=1"))
     return rows

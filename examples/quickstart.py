@@ -1,8 +1,12 @@
-"""Quickstart: the paper's technique end to end in ~40 lines.
+"""Quickstart: the paper's technique end to end.
 
 1. map a conv layer with every algorithm and compare cycles;
-2. execute the TetrisG mapping in JAX and check it against lax.conv;
-3. run the macro-grid search (Alg 2) and the CIM simulator (EDAP).
+2. execute the TetrisG mapping in JAX — the placement-batched reference
+   executor (cim_conv2d_jit) AND the macro-parallel executor
+   (mapped_conv2d, executed grid steps == the mapping's cycle count) —
+   and check both against lax.conv;
+3. run the macro-grid search (Alg 2), execute the whole mapped network,
+   feed it to the CIM simulator, and print the summary table.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,9 +14,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (ALGORITHMS, ArrayConfig, ConvLayerSpec, grid_search,
-                        map_layer, map_net, networks)
+                        map_layer, networks)
 from repro.core.simulator import simulate
-from repro.cnn import cim_conv2d, reference_conv2d
+from repro.cnn import (cim_conv2d_jit, executed_steps, mapped_conv2d,
+                       mapped_net_apply, reference_conv2d,
+                       zero_pruned_kernels)
 
 # --- 1. mapping: CNN8 layer 3 (the paper's Fig 12 example) -------------
 layer = ConvLayerSpec("CNN8-3", 18, 18, 3, 3, 32, 32)
@@ -29,15 +35,26 @@ rng = np.random.RandomState(0)
 x = jnp.asarray(rng.randn(1, layer.ic, 18, 18), jnp.float32)
 k = jnp.asarray(rng.randn(3, 3, layer.ic // m.group, layer.oc),
                 jnp.float32)
-err = float(jnp.max(jnp.abs(
-    cim_conv2d(m, x, k) - reference_conv2d(layer, x, k, groups=m.group))))
-print(f"\nmapped conv == lax.conv (max err {err:.1e})")
+ref = reference_conv2d(layer, x, k, groups=m.group)
+err_cim = float(jnp.max(jnp.abs(cim_conv2d_jit(m, x, k) - ref)))
+err_map = float(jnp.max(jnp.abs(mapped_conv2d(m, x, k) - ref)))
+print(f"\nreference executor  == lax.conv (max err {err_cim:.1e})")
+print(f"macro-parallel path == lax.conv (max err {err_map:.1e}), "
+      f"executed steps {executed_steps(m)} == cycles {m.cycles}")
 
-# --- 3. macro-grid search + system metrics ------------------------------
+# --- 3. Alg 2 grid search -> execute the mapped network -> simulate ----
 res = grid_search("cnn8", networks.cnn8(), ArrayConfig(64, 64), p_max=8,
-                  algorithm="TetrisG-SDK")
-sim = simulate(res.best)
+                  algorithm="TetrisG-SDK", groups=(1, 2, 4))
+net = res.best
+ks = zero_pruned_kernels(net, [
+    jnp.asarray(rng.randn(l.layer.k_h, l.layer.k_w,
+                          l.layer.ic // l.group, l.layer.oc),
+                jnp.float32) * 0.1 for l in net.layers])
+x0 = jnp.asarray(rng.randn(1, 24, 18, 18), jnp.float32)
+logits = mapped_net_apply(net, ks, x0)   # asserts steps == cycles per layer
+sim = simulate(net)
 print(f"\nAlg 2 over 8x 64x64 macros -> best grid "
-      f"{res.best.grid.r}x{res.best.grid.c}, "
-      f"{res.best.total_cycles} cycles, "
-      f"EDAP {sim.edap:.2e} J*s*m^2, {sim.active_macros} active macros")
+      f"{net.grid.r}x{net.grid.c}, {net.total_cycles} cycles, "
+      f"EDAP {sim.edap:.2e} J*s*m^2, {sim.active_macros} active macros; "
+      f"mapped forward out {tuple(logits.shape)}")
+print("\n" + net.summary())

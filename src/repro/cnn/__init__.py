@@ -1,5 +1,11 @@
 # CNN substrate: the paper's benchmark networks in JAX + the CIM-mapped
-# convolution executor (semantic bridge mapping -> compute).
+# convolution executors (semantic bridge mapping -> compute).
+# cim_conv.py    reference placement-batched executor (single implicit macro)
+# mapped_net.py  macro-parallel executor: the P-macro grid as vmap/shard_map
 from .cim_conv import (build_weight_matrix, cim_conv2d, cim_conv2d_jit,
-                       placement_groups, reference_conv2d,
-                       window_placements)
+                       gather_patches, placement_groups, reference_conv2d,
+                       scatter_indices, window_placements)
+from .mapped_net import (executed_steps, layer_schedule, mapped_conv2d,
+                         mapped_conv2d_jit, mapped_net_apply,
+                         network_schedule, reference_net_apply,
+                         zero_pruned_kernels)

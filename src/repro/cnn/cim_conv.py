@@ -96,6 +96,33 @@ def placement_groups(layer: ConvLayerSpec, tile: TileMapping
             for shape, org in groups.items()}
 
 
+def gather_patches(xc: jnp.ndarray, origins: np.ndarray, ph: int, pw: int
+                   ) -> jnp.ndarray:
+    """Stack every congruent placement of one window shape in one gather:
+    xc (..., C, H, W), origins (N, 2) of (y, x) -> (..., N, C*ph*pw).
+    Row order is channel-major (channel, y, x) — exactly the row order of
+    :func:`build_weight_matrix`, so the result multiplies the weight
+    matrix directly.  Shared by the reference executor and the
+    macro-parallel executor (cnn/mapped_net.py)."""
+    ys, xs = origins[:, 0], origins[:, 1]
+    Y = ys[:, None, None] + np.arange(ph)[None, :, None]   # (N, ph, 1)
+    X = xs[:, None, None] + np.arange(pw)[None, None, :]   # (N, 1, pw)
+    p = xc[..., Y, X]                                      # (..., C, N, ph, pw)
+    p = jnp.moveaxis(p, -4, -3)                            # (..., N, C, ph, pw)
+    return p.reshape(*p.shape[:-3], -1)
+
+
+def scatter_indices(origins: np.ndarray, py: int, px: int, stride: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Output-raster indices of every placement's (py x px) output tile:
+    (OY, OX) broadcastable to (N, py, px), for a vectorized set-semantics
+    scatter (overlapping windows recompute identical values)."""
+    ys, xs = origins[:, 0], origins[:, 1]
+    OY = (ys // stride)[:, None, None] + np.arange(py)[None, :, None]
+    OX = (xs // stride)[:, None, None] + np.arange(px)[None, None, :]
+    return OY, OX
+
+
 def build_weight_matrix(layer: ConvLayerSpec, kernel: jnp.ndarray,
                         pw_h: int, pw_w: int) -> jnp.ndarray:
     """Shifted-and-duplicated kernel matrix for one window shape (Fig 5).
@@ -173,22 +200,15 @@ def _cim_conv2d_traced(mapping: LayerMapping, x: jnp.ndarray,
             Wm = Wm.reshape(kept * ph * pw, py * px, g, oc_g)
             Wm = Wm.transpose(2, 0, 1, 3).reshape(
                 g, kept * ph * pw, py * px * oc_g)
-            ys, xs = origins[:, 0], origins[:, 1]
-            n = len(ys)
-            # gather every congruent placement of every group at once:
-            # (b, g, kept, N, ph, pw)
-            Y = ys[:, None, None] + np.arange(ph)[None, :, None]
-            X = xs[:, None, None] + np.arange(pw)[None, None, :]
-            patches = xc[:, :, :, Y, X]
-            flat = patches.transpose(0, 1, 3, 2, 4, 5).reshape(
-                b, g, n, kept * ph * pw)
+            n = len(origins)
+            # gather every congruent placement of every group at once
+            flat = gather_patches(xc, origins, ph, pw)  # (b,g,N,kept*ph*pw)
             prod = jnp.einsum("bgnr,grp->bgnp", flat, Wm)
             prod = prod.reshape(b, g, n, py, px, oc_g)
             prod = prod.transpose(0, 1, 5, 2, 3, 4)  # (b,g,oc_g,N,py,px)
             # vectorized scatter with set semantics; duplicate indices
             # only occur where the recomputed values are identical
-            OY = (ys // s)[:, None, None] + np.arange(py)[None, :, None]
-            OX = (xs // s)[:, None, None] + np.arange(px)[None, None, :]
+            OY, OX = scatter_indices(origins, py, px, s)
             buf = buf.at[:, :, :, OY, OX].set(prod)
         out = out + buf
         c_base += tile.depth

@@ -1,0 +1,399 @@
+"""Macro-parallel mapped-network executor — the paper's P-macro grid
+realized as *executed* parallelism, not just cycle bookkeeping.
+
+``TileMapping.cycles`` assumes a grid (r, c) runs ``r`` channel passes and
+``c`` oc passes of every window load concurrently:
+
+    cycles = n_windows * ceil(AR_c / r) * ceil(AC_c / c)
+
+This module executes exactly that schedule (DESIGN.md §3).  Per tile, the
+(AR_c x AC_c) pass matrix is covered by ``ceil(AR_c/r) * ceil(AC_c/c)``
+sequential *super-steps*; within a super-step the (r x c) block of array
+passes runs as one macro-grid step — ``jax.vmap`` over the explicit
+(row, col) macro axes on a single device, or ``shard_map`` over a
+("row", "col") device mesh (launch.mesh.make_macro_mesh /
+launch.sharding.macro_pass_specs) when one is available.  Groups follow
+``LayerMapping.group_split``: ``gr*gc`` congruent groups run concurrently
+on disjoint sub-grids (batched through the group axis), remaining groups
+time-multiplex as ``group_rounds`` sequential rounds.
+
+The *executed* step count is derived from the same host-side structures
+the executor iterates (placement lists x super-step trip counts x group
+rounds) and is asserted equal to ``LayerMapping.cycles`` for every layer
+— the equivalence contract that turns the Fig 20 speed-ups from
+accounting into execution.
+
+Numerics follow cnn/cim_conv.py: window loads of one congruent shape are
+gathered and multiplied in one batch (sequential in hardware, counted as
+such); each channel super-step writes a set-semantics buffer (overlapping
+border/marginal windows recompute identical partial sums), buffers
+accumulate across channel super-steps — the shift-and-add adds of Fig 3,
+with the cross-row reduction of a super-step becoming a ``psum`` over the
+mesh "row" axis in the sharded path.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import (LayerMapping, MacroGrid, NetworkMapping,
+                              TileMapping)
+from repro.launch.sharding import macro_mesh_fits, macro_pass_specs
+from .cim_conv import (build_weight_matrix, gather_patches,
+                       placement_groups, reference_conv2d, scatter_indices)
+
+
+# ---------------------------------------------------------------------------
+# Execution schedule: the executor's sequential structure, as host ints
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TileSchedule:
+    """Sequential structure of one tile's execution (per group round)."""
+
+    window_loads: int          # gathered placements == tile.n_windows
+    r_steps: int               # ceil(ar_c / sub_r) channel super-steps
+    c_steps: int               # ceil(ac_c / sub_c) oc super-steps
+
+    @property
+    def steps(self) -> int:
+        return self.window_loads * self.r_steps * self.c_steps
+
+
+@dataclass(frozen=True)
+class LayerSchedule:
+    """What :func:`mapped_conv2d` actually executes for one layer."""
+
+    layer: str
+    sub: MacroGrid             # macro sub-grid of one group's passes
+    group_rounds: int          # sequential rounds of gr*gc-parallel groups
+    tiles: Tuple[TileSchedule, ...]
+
+    @property
+    def steps(self) -> int:
+        """Executed sequential grid steps — the measured counterpart of
+        ``LayerMapping.cycles``."""
+        return self.group_rounds * sum(t.steps for t in self.tiles)
+
+
+@functools.lru_cache(maxsize=None)
+def layer_schedule(mapping: LayerMapping) -> LayerSchedule:
+    """Derive the executor's schedule from the mapping.  ``window_loads``
+    counts the *actual* placement list the executor gathers (floor grid +
+    marginals, or the ceil-form clamped raster), not the stored
+    ``n_windows`` — the equality of the two is part of the contract.
+    Cached per mapping (frozen dataclass): the dispatch-time schedule
+    assert in :func:`mapped_conv2d` then costs nothing per step."""
+    sub = mapping.sub_grid
+    tiles = []
+    for tile in mapping.tiles:
+        _, ar_c, _, ac_c = mapping.tile_passes(tile)
+        loads = sum(len(o) for o in
+                    placement_groups(mapping.layer, tile).values())
+        tiles.append(TileSchedule(
+            window_loads=loads,
+            r_steps=math.ceil(ar_c / sub.r),
+            c_steps=math.ceil(ac_c / sub.c)))
+    return LayerSchedule(layer=mapping.layer.name, sub=sub,
+                         group_rounds=mapping.group_rounds,
+                         tiles=tuple(tiles))
+
+
+def executed_steps(mapping: LayerMapping) -> int:
+    return layer_schedule(mapping).steps
+
+
+def network_schedule(net: NetworkMapping) -> Tuple[LayerSchedule, ...]:
+    return tuple(layer_schedule(m) for m in net.layers)
+
+
+def check_steps(mapping: LayerMapping) -> None:
+    """Raise unless the executor's schedule matches the mapping's cycle
+    count — the per-layer half of the DESIGN.md §3 contract."""
+    s = layer_schedule(mapping)
+    if s.steps != mapping.cycles:
+        raise AssertionError(
+            f"{mapping.layer.name}: executed steps {s.steps} != "
+            f"cycles {mapping.cycles} (sub-grid {s.sub.r}x{s.sub.c}, "
+            f"rounds {s.group_rounds})")
+
+
+def assert_steps_match(net: NetworkMapping) -> None:
+    """Executed grid steps == analytical cycle count for every layer —
+    the Fig 20 speed-ups are *executed*, not just counted."""
+    for m in net.layers:
+        check_steps(m)
+
+
+# ---------------------------------------------------------------------------
+# One macro-grid super-step
+# ---------------------------------------------------------------------------
+
+def _one_macro(p: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """ONE macro's array pass: patches (b, g, N, K) against this macro's
+    (ic_t x oc_t) weight block (g, K, Po) -> (b, g, N, Po)."""
+    return jnp.einsum("bgnk,gko->bgno", p, w)
+
+
+# grid rows share nothing; grid columns share the row's patch block
+_macro_cols = jax.vmap(_one_macro, in_axes=(None, 0))      # over sub_c
+_macro_grid = jax.vmap(_macro_cols, in_axes=(0, 0))        # over sub_r
+
+
+def _macro_step(p_blk: jnp.ndarray, w_blk: jnp.ndarray,
+                mesh=None) -> jnp.ndarray:
+    """One super-step of the macro grid: an (r x c) block of array passes
+    runs concurrently.
+
+    p_blk (sub_r, b, g, N, K): each macro row's channel-pass patch block.
+    w_blk (sub_r, sub_c, g, K, Po): each macro's weight block.
+    Returns (sub_c, b, g, N, Po) — partial products summed over the grid
+    rows (the shift-and-add accumulation across macro rows).
+
+    On a ("row", "col") device mesh whose axes divide (sub_r, sub_c) the
+    step runs under shard_map — macros become devices and the row
+    reduction a psum; otherwise the macro axes are vmapped on one device.
+    """
+    if macro_mesh_fits(mesh, p_blk.shape[0], w_blk.shape[1]):
+        from jax.experimental.shard_map import shard_map
+        p_spec, w_spec, o_spec = macro_pass_specs()
+
+        def local(p, w):
+            part = _macro_grid(p, w).sum(0)          # local rows
+            return jax.lax.psum(part, "row")         # cross-device rows
+
+        return shard_map(local, mesh=mesh, in_specs=(p_spec, w_spec),
+                         out_specs=o_spec)(p_blk, w_blk)
+    return _macro_grid(p_blk, w_blk).sum(0)
+
+
+# ---------------------------------------------------------------------------
+# Layer executor
+# ---------------------------------------------------------------------------
+
+def _tile_operands(mapping: LayerMapping, tile: TileMapping,
+                   xc: jnp.ndarray, ks: jnp.ndarray,
+                   R: int, C: int) -> List[dict]:
+    """Pass-blocked operands per congruent window shape.
+
+    xc (b, g, ic_pad, H, W) and ks (k_h, k_w, ic_pad, g, oc_pad) are the
+    tile's channel slice zero-padded to whole super-steps.  For each
+    shape: patches (R, sub_r, b, g, N, K) with K = ic_t*ph*pw, and
+    weights (R, C, sub_r, sub_c, g, K, npos*oc_t) — the row/oc blocking
+    of the Fig 5 shifted-and-duplicated matrix.
+    """
+    layer = mapping.layer
+    s = layer.stride
+    sub = mapping.sub_grid
+    ic_t, _, oc_t, _ = mapping.tile_passes(tile)
+    b, g = xc.shape[0], xc.shape[1]
+    ic_pad, oc_pad = xc.shape[2], ks.shape[4]
+    out = []
+    for (ph, pw), origins in placement_groups(layer, tile).items():
+        py = (ph - layer.k_h) // s + 1
+        px = (pw - layer.k_w) // s + 1
+        npos = py * px
+        K = ic_t * ph * pw
+        flat = gather_patches(xc, origins, ph, pw)     # (b,g,N,ic_pad*ph*pw)
+        n = flat.shape[2]
+        p_all = flat.reshape(b, g, n, R * sub.r, K)
+        p_all = p_all.transpose(3, 0, 1, 2, 4).reshape(
+            R, sub.r, b, g, n, K)
+        Wm = build_weight_matrix(
+            layer, ks.reshape(layer.k_h, layer.k_w, ic_pad, g * oc_pad),
+            ph, pw)                                    # (ic_pad*ph*pw, ...)
+        w_all = Wm.reshape(R, sub.r, K, npos, g, C, sub.c, oc_t)
+        w_all = w_all.transpose(0, 5, 1, 6, 4, 2, 3, 7).reshape(
+            R, C, sub.r, sub.c, g, K, npos * oc_t)
+        OY, OX = scatter_indices(origins, py, px, s)
+        out.append(dict(p_all=p_all, w_all=w_all, OY=OY, OX=OX,
+                        py=py, px=px))
+    return out
+
+
+def _mapped_conv2d_traced(mapping: LayerMapping, x: jnp.ndarray,
+                          kernel: jnp.ndarray, *, mesh=None) -> jnp.ndarray:
+    """Macro-parallel convolution per the mapping.  Same layout contract
+    as cnn.cim_conv.cim_conv2d: x (batch, ic, i_h, i_w) pre-padded,
+    kernel (k_h, k_w, ic // G, oc) in lax grouped layout, output
+    (batch, oc, o_h, o_w); pruned channels are skipped."""
+    layer = mapping.layer
+    b = x.shape[0]
+    o_h, o_w = layer.o_h, layer.o_w
+    g = mapping.group
+    ic_g, oc_g = layer.ic // g, layer.oc // g
+    if kernel.shape != (layer.k_h, layer.k_w, ic_g, layer.oc):
+        raise ValueError(f"kernel shape {kernel.shape} != grouped layout "
+                         f"{(layer.k_h, layer.k_w, ic_g, layer.oc)}")
+
+    sub = mapping.sub_grid
+    # all groups are congruent: the group axis batches the gr*gc-parallel
+    # groups; sequential group rounds only multiply the step count
+    xr = x.reshape(b, g, ic_g, layer.i_h, layer.i_w)
+    kr = kernel.reshape(layer.k_h, layer.k_w, ic_g, g, oc_g)
+    out = jnp.zeros((b, g, oc_g, o_h, o_w), jnp.result_type(x, kernel))
+
+    c_base = 0
+    for tile in mapping.tiles:
+        kept = tile.depth
+        ic_t, ar_c, oc_t, ac_c = mapping.tile_passes(tile)
+        R = math.ceil(ar_c / sub.r)          # sequential channel super-steps
+        C = math.ceil(ac_c / sub.c)          # sequential oc super-steps
+        ic_pad = R * sub.r * ic_t            # idle macros = zero passes
+        oc_pad = C * sub.c * oc_t
+        xc = jnp.pad(xr[:, :, c_base:c_base + kept],
+                     ((0, 0), (0, 0), (0, ic_pad - kept), (0, 0), (0, 0)))
+        ks = jnp.pad(kr[:, :, c_base:c_base + kept],
+                     ((0, 0), (0, 0), (0, ic_pad - kept), (0, 0),
+                      (0, oc_pad - oc_g)))
+        shapes = _tile_operands(mapping, tile, xc, ks, R, C)
+
+        acc = jnp.zeros((b, g, oc_pad, o_h, o_w), out.dtype)
+        soc = sub.c * oc_t                   # oc columns per super-step
+        for ri in range(R):
+            # one channel super-step: set semantics within it (every
+            # window writes this step's full partial sum), accumulate
+            # across steps (shift-and-add)
+            buf = jnp.zeros_like(acc)
+            for ci in range(C):
+                for sh in shapes:
+                    res = _macro_step(sh["p_all"][ri],
+                                      sh["w_all"][ri, ci], mesh)
+                    py, px = sh["py"], sh["px"]
+                    n = res.shape[3]
+                    vals = res.reshape(sub.c, b, g, n, py, px, oc_t)
+                    vals = vals.transpose(1, 2, 0, 6, 3, 4, 5).reshape(
+                        b, g, soc, n, py, px)
+                    buf = buf.at[:, :, ci * soc:(ci + 1) * soc,
+                                 sh["OY"], sh["OX"]].set(vals)
+            acc = acc + buf
+        out = out + acc[:, :, :oc_g]
+        c_base += kept
+    return out.reshape(b, layer.oc, o_h, o_w)
+
+
+mapped_conv2d_jit = functools.partial(
+    jax.jit, static_argnums=(0,), static_argnames=("mesh",))(
+    _mapped_conv2d_traced)
+mapped_conv2d_jit.__doc__ = (
+    """jit entry: mapping (frozen dataclass) and mesh are static — one
+    XLA program per distinct (mapping, mesh, shapes).""")
+
+
+def mapped_conv2d(mapping: LayerMapping, x: jnp.ndarray,
+                  kernel: jnp.ndarray, *, mesh=None) -> jnp.ndarray:
+    """Execute one layer macro-parallel, asserting the executed schedule
+    matches the mapping's cycle count (host-side, cached, free under
+    jit)."""
+    check_steps(mapping)
+    return mapped_conv2d_jit(mapping, x, kernel, mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# Network forward pass
+# ---------------------------------------------------------------------------
+
+def fit_spatial(x: jnp.ndarray, i_h: int, i_w: int) -> jnp.ndarray:
+    """Deterministic inter-layer adapter: 2x2 max-pool while the feature
+    map is >= 2x the next layer's (padded) input, then center pad / crop
+    to the exact size.  Mirrored by the reference composition so the
+    cross-check compares executors, not plumbing."""
+    while x.shape[-2] >= 2 * i_h and x.shape[-1] >= 2 * i_w:
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+    for ax, tgt in ((-2, i_h), (-1, i_w)):
+        d = tgt - x.shape[ax]
+        if d > 0:
+            pad = [(0, 0)] * x.ndim
+            pad[ax] = (d // 2, d - d // 2)
+            x = jnp.pad(x, pad)
+        elif d < 0:
+            lo = (-d) // 2
+            x = jax.lax.slice_in_dim(x, lo, lo + tgt, axis=x.ndim + ax)
+    return x
+
+
+def _center_crop(x: jnp.ndarray, h: int, w: int) -> jnp.ndarray:
+    y0 = (x.shape[-2] - h) // 2
+    x0 = (x.shape[-1] - w) // 2
+    return x[..., y0:y0 + h, x0:x0 + w]
+
+
+def _net_forward(net: NetworkMapping, kernels: Sequence[jnp.ndarray],
+                 x: jnp.ndarray,
+                 conv_fn: Callable[[LayerMapping, jnp.ndarray, jnp.ndarray],
+                                   jnp.ndarray],
+                 activation=None) -> jnp.ndarray:
+    """Layer-by-layer forward chaining: plain when the next layer's ic
+    equals this layer's oc, dense (DenseNet-style concat of the layer's
+    unpadded input with its output) when it equals their sum."""
+    mappings = net.layers
+    for i, m in enumerate(mappings):
+        lay = m.layer
+        if x.shape[1] != lay.ic:
+            raise ValueError(f"{lay.name}: input has {x.shape[1]} channels,"
+                             f" layer expects {lay.ic}")
+        xp = fit_spatial(x, lay.i_h, lay.i_w)
+        y = conv_fn(m, xp, kernels[i])
+        if activation is not None:
+            y = activation(y)
+        if i + 1 < len(mappings):
+            nxt = mappings[i + 1].layer
+            if nxt.ic == lay.oc:
+                x = y
+            elif nxt.ic == x.shape[1] + lay.oc:
+                skip = _center_crop(xp, y.shape[-2], y.shape[-1])
+                x = jnp.concatenate([skip, y], axis=1)
+            else:
+                raise ValueError(
+                    f"cannot chain {lay.name} (oc={lay.oc}, "
+                    f"carry={x.shape[1]}) into {nxt.name} (ic={nxt.ic})")
+        else:
+            x = y
+    return x
+
+
+def mapped_net_apply(net: NetworkMapping, kernels: Sequence[jnp.ndarray],
+                     x: jnp.ndarray, *, mesh=None,
+                     activation=None) -> jnp.ndarray:
+    """Forward an entire ``NetworkMapping`` through the macro-parallel
+    executor.  ``kernels[i]`` is layer i's kernel in that mapping's
+    grouped layout ``(k_h, k_w, ic // G_i, oc)``.  Asserts, per layer,
+    executed grid steps == ``LayerMapping.cycles``."""
+    assert_steps_match(net)
+    return _net_forward(
+        net, kernels, x,
+        lambda m, xx, kk: mapped_conv2d(m, xx, kk, mesh=mesh),
+        activation)
+
+
+def reference_net_apply(net: NetworkMapping,
+                        kernels: Sequence[jnp.ndarray], x: jnp.ndarray, *,
+                        activation=None) -> jnp.ndarray:
+    """Oracle composition: same chaining, lax.conv per layer (pruned
+    channels must be zeroed in ``kernels``, see zero_pruned_kernels)."""
+    return _net_forward(
+        net, kernels, x,
+        lambda m, xx, kk: reference_conv2d(m.layer, xx, kk,
+                                           groups=m.group),
+        activation)
+
+
+def zero_pruned_kernels(net: NetworkMapping,
+                        kernels: Sequence[jnp.ndarray]
+                        ) -> List[jnp.ndarray]:
+    """Zero each layer's pruned trailing input channels (the
+    retrained-network convention of the equivalence tests)."""
+    out = []
+    for m, k in zip(net.layers, kernels):
+        pruned = sum(t.pruned_channels for t in m.tiles)
+        ic_g = m.layer.ic // m.group
+        if pruned:
+            k = k.at[:, :, ic_g - pruned:, :].set(0.0)
+        out.append(k)
+    return out

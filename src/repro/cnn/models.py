@@ -6,11 +6,14 @@ identical.  ``group`` applies TetrisG grouped convolutions (Alg 1
 training side): every conv's kernel becomes the lax grouped layout
 ``(k, k, ic/G, oc)``.
 
-Forward paths:
-  * ``apply(params, x)``                  — lax.conv fast path
-  * ``apply(params, x, mappings=...)``    — conv executed through
-    cim_conv2d per the given LayerMappings (slow; used to demonstrate the
-    mapped network computes the same logits).
+Forward paths (``executor=``):
+  * ``"reference"`` — lax.conv fast path (default without mappings)
+  * ``"cim"``       — cim_conv2d per the given LayerMappings: the
+    placement-batched reference executor (default with mappings)
+  * ``"mapped"``    — mapped_net.mapped_conv2d: the macro-parallel
+    executor (vmap/shard_map over the mapping's macro grid), so training
+    runs through the very path whose cycles the tables report
+    (DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -23,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.core.types import ConvLayerSpec, LayerMapping
 from .cim_conv import cim_conv2d, reference_conv2d
+from .mapped_net import mapped_conv2d
 
 
 @dataclass(frozen=True)
@@ -79,14 +83,27 @@ def _pad(x: jnp.ndarray, target: int) -> jnp.ndarray:
 
 
 def apply_cnn(params: Dict, cfg: CNNConfig, x: jnp.ndarray,
-              mappings: Optional[Sequence[LayerMapping]] = None
-              ) -> jnp.ndarray:
-    """x: (b, in_ch, H, W) -> logits (b, num_classes)."""
+              mappings: Optional[Sequence[LayerMapping]] = None,
+              executor: Optional[str] = None, mesh=None) -> jnp.ndarray:
+    """x: (b, in_ch, H, W) -> logits (b, num_classes).
+
+    ``executor`` selects the conv path (module docstring); None resolves
+    to "cim" when mappings are given, else "reference".  ``mesh`` is an
+    optional ("row", "col") device mesh for the mapped executor
+    (launch.mesh.make_macro_mesh)."""
+    if executor is None:
+        executor = "reference" if mappings is None else "cim"
+    if executor not in ("reference", "cim", "mapped"):
+        raise ValueError(f"unknown executor {executor!r}")
+    if executor != "reference" and mappings is None:
+        raise ValueError(f"executor={executor!r} needs mappings")
     g = cfg.group
     for i, c in enumerate(cfg.convs):
         x = _pad(x, c.i_w)
         w, b = params["convs"][i]["w"], params["convs"][i]["b"]
-        if mappings is not None:
+        if executor == "mapped":
+            y = mapped_conv2d(mappings[i], x, w, mesh=mesh)
+        elif executor == "cim":
             y = cim_conv2d(mappings[i], x, w)
         else:
             y = reference_conv2d(c, x, w, groups=g)

@@ -6,16 +6,26 @@ checked on a seeded synthetic image-classification task
 (:mod:`repro.data.synthetic`).  We train the CNN8-shaped stack with
 G in {1, 2, 4} under identical budgets and report accuracy deltas next to
 the mapping cycle counts (benchmarks/table2_grouped.py).
+
+``executor="mapped"`` (or "cim") trains through the mapping-driven
+executors instead of lax.conv: every conv of every training step runs
+exactly as its ``LayerMapping`` prescribes (macro-parallel super-steps
+for "mapped" — DESIGN.md §3), so the accuracy the study reports is
+measured on the same execution path whose cycles the tables count.
+Gradients flow through the executors' gather/matmul/scatter (exact;
+asserted against the lax.conv path in tests/test_mapped_net.py).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.grouped import tetrisg_layer
+from repro.core.types import ArrayConfig, LayerMapping, MacroGrid
 from repro.data.synthetic import image_task
 from .models import CNNConfig, apply_cnn, cnn8_config, ensure_head, init_cnn
 
@@ -28,17 +38,31 @@ class TrainResult:
     final_loss: float
     train_acc: float
     test_acc: float
+    executor: str = "reference"
 
 
-def loss_fn(params, cfg: CNNConfig, x, y):
-    logits = apply_cnn(params, cfg, x)
+def train_mappings(cfg: CNNConfig, array: ArrayConfig,
+                   grid: MacroGrid = MacroGrid()
+                   ) -> Tuple[LayerMapping, ...]:
+    """Per-conv TetrisG mappings pinned to the config's grouping factor,
+    so each mapping's group matches the trained kernels' grouped layout
+    ``(k, k, ic/G, oc)``."""
+    return tuple(tetrisg_layer(c, array, grid, groups=(cfg.group,))
+                 for c in cfg.convs)
+
+
+def loss_fn(params, cfg: CNNConfig, x, y, mappings=None, executor=None):
+    logits = apply_cnn(params, cfg, x, mappings=mappings, executor=executor)
     logp = jax.nn.log_softmax(logits)
     return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
 
 
 def train_cnn(cfg: CNNConfig, *, steps: int = 300, batch: int = 64,
               lr: float = 3e-3, seed: int = 0,
-              n_train: int = 2048, n_test: int = 512) -> TrainResult:
+              n_train: int = 2048, n_test: int = 512,
+              executor: str = "reference",
+              array: Optional[ArrayConfig] = None,
+              grid: MacroGrid = MacroGrid()) -> TrainResult:
     rng = jax.random.PRNGKey(seed)
     k_init, k_data = jax.random.split(rng)
     xs, ys, xt, yt = image_task(k_data, n_train=n_train, n_test=n_test,
@@ -47,9 +71,14 @@ def train_cnn(cfg: CNNConfig, *, steps: int = 300, batch: int = 64,
                                 num_classes=cfg.num_classes)
     params = ensure_head(init_cnn(k_init, cfg), cfg)
 
+    mappings = None
+    if executor != "reference":
+        mappings = train_mappings(cfg, array or ArrayConfig(512, 512), grid)
+
     @jax.jit
     def step(params, opt, x, y):
-        l, grads = jax.value_and_grad(loss_fn)(params, cfg, x, y)
+        l, grads = jax.value_and_grad(loss_fn)(params, cfg, x, y,
+                                               mappings, executor)
         # Adam
         m = jax.tree.map(lambda m_, g: 0.9 * m_ + 0.1 * g, opt["m"], grads)
         v = jax.tree.map(lambda v_, g: 0.999 * v_ + 0.001 * g * g,
@@ -73,10 +102,13 @@ def train_cnn(cfg: CNNConfig, *, steps: int = 300, batch: int = 64,
 
     @jax.jit
     def acc(params, x, y):
-        return (apply_cnn(params, cfg, x).argmax(-1) == y).mean()
+        logits = apply_cnn(params, cfg, x, mappings=mappings,
+                           executor=executor)
+        return (logits.argmax(-1) == y).mean()
 
     return TrainResult(
         config=cfg.name, group=cfg.group, steps=steps,
         final_loss=float(loss),
         train_acc=float(acc(params, xs[:n_test], ys[:n_test])),
-        test_acc=float(acc(params, xt, yt)))
+        test_acc=float(acc(params, xt, yt)),
+        executor=executor)

@@ -14,8 +14,19 @@ mode) or spread over disjoint sub-grids of the macro grid
 Accuracy: the paper trains the network with grouped Conv2D and accepts G
 only if accuracy loss stays under a threshold (<=0.5 %).  The training-side
 counterpart lives in ``repro.cnn.train`` (grouped CNN training on the
-synthetic dataset); this module takes the *mapping* decision given an
-allowed set of G.
+synthetic dataset, now runnable *through* the mapped executor so the
+accuracy and the cycles come from the same path); this module takes the
+*mapping* decision given an allowed set of G.
+
+Invariants:
+
+* the winning ``LayerMapping`` has ``group == G`` and tiles searched on
+  the per-group dims — executors therefore expect kernels in the lax
+  grouped layout ``(k, k, ic/G, oc)``;
+* ``group_split=(gr, gc)`` always satisfies ``gr <= grid.r``,
+  ``gc <= grid.c`` and ``gr*gc <= G`` (best_group_split's lattice), so
+  ``sub_grid`` never degenerates below 1x1;
+* ties prefer fewer groups (accuracy headroom before cycle parity).
 """
 from __future__ import annotations
 

@@ -1,8 +1,29 @@
 """Top-level mapping API: algorithm dispatch + depthwise/native-group
-handling + network mapping.
+handling + network mapping (paper §III, Algs 1-5 behind one door).
 
 ``map_layer(layer, array, algorithm=..., grid=...)`` is the single entry
-point used by benchmarks, the CIM simulator and the JAX executors.
+point used by benchmarks, the CIM simulator and all three JAX executors
+(cnn/cim_conv.py, cnn/mapped_net.py, kernels/im2win_conv.py);
+``map_net`` / ``grid_search`` lift it to whole networks and the Alg 2
+macro-budget sweep.  ``ALGORITHMS`` orders the six searches exactly as
+the paper's comparison tables do (img2col -> TetrisG-SDK).
+
+Native groups (depthwise = ``groups=ic``, §IV-C3): a layer with
+``groups > 1`` is mapped once on its per-group dims and the native-group
+count folds *multiplicatively* into ``LayerMapping.group`` — TetrisG's
+searched grouping composes on top, and the paper's MobileNet observation
+(depthwise leaves no cross-channel reuse, so SDK windows degenerate)
+falls out of this accounting rather than being special-cased.
+
+Invariants:
+
+* every returned ``LayerMapping`` carries the caller's ``grid`` and is
+  executable as-is by the executors (tiles cover all kept channels; the
+  DESIGN.md §5 equivalence contract is algorithm-independent);
+* ``tiles`` always describe ONE group's mapping — for native groups the
+  per-group sub-layer's, re-wrapped onto the full layer spec;
+* dispatch is total over ``ALGORITHMS``: an unknown name raises KeyError
+  rather than silently falling back.
 """
 from __future__ import annotations
 

@@ -1,9 +1,27 @@
-"""Benchmark network conv-layer specs (paper §IV-A).
+"""Benchmark network conv-layer specs (paper §IV-A, Table I).
 
-IFM sizes are the padded sizes used by the paper's tables (CNN8 and
-Inception rows reproduce Table I exactly).  DenseNet40 / MobileNet follow
+IFM sizes are the *padded* sizes used by the paper's tables (CNN8 and
+Inception rows reproduce Table I exactly: e.g. CNN8-2 is an 18x18 IFM
+for a 16x16 feature map under 3x3/pad-1).  DenseNet40 / MobileNet follow
 their standard literature configurations; where the paper under-specifies
 (it reports only totals), the construction is documented inline.
+
+The same specs feed every stage of the pipeline: the mapping searches
+(core/mapper.py), the simulator (§IV-D), the trained CNNs
+(cnn/models.py builds its stacks from ``ConvLayerSpec``) and the
+mapped-network executor (cnn/mapped_net.py chains these stacks
+layer-by-layer — plain for CNN8, dense-concat for DenseNet40).
+
+Invariants:
+
+* layer order is forward-pass order; consecutive specs are chainable
+  (next ic == this oc, or == carried channels + oc for dense blocks) —
+  relied on by ``mapped_net_apply`` and its tests;
+* ``stride``/``groups`` stay in the spec (MobileNet depthwise carries
+  ``groups=ic``); nothing is pre-lowered, so every algorithm sees the
+  layer the paper's tables describe;
+* ``NETWORKS`` maps the paper's four benchmark names to zero-argument
+  constructors (the benchmark scripts' registry).
 """
 from __future__ import annotations
 

@@ -176,6 +176,14 @@ class TileMapping:
         return k_area * per_load_ic * pos * self.oc_t * array.cols_per_weight
 
 
+def sub_grid(grid: MacroGrid, group_split: Tuple[int, int]) -> MacroGrid:
+    """The disjoint sub-grid ONE group's mapping runs on when
+    ``group_split=(gr,gc)`` groups execute concurrently along the grid
+    axes (Eq 6): rows parallelize channel passes, columns oc passes."""
+    gr, gc = group_split
+    return MacroGrid(max(1, grid.r // gr), max(1, grid.c // gc))
+
+
 def layer_cycles(tiles: Sequence["TileMapping"], grid: MacroGrid,
                  group: int, group_split: Tuple[int, int]) -> int:
     """Total cycles for `group` groups, `group_split=(gr,gc)` of them running
@@ -186,7 +194,7 @@ def layer_cycles(tiles: Sequence["TileMapping"], grid: MacroGrid,
     group=1 this is exactly Eq 5.
     """
     gr, gc = group_split
-    sub = MacroGrid(max(1, grid.r // gr), max(1, grid.c // gc))
+    sub = sub_grid(grid, group_split)
     per_group = sum(t.cycles(sub) for t in tiles)
     return per_group * math.ceil(group / (gr * gc))
 
@@ -214,6 +222,33 @@ class LayerMapping:
                             self.group_split)
 
     @property
+    def sub_grid(self) -> MacroGrid:
+        """Sub-grid one group's passes occupy (rows -> channel passes,
+        columns -> oc passes); see :func:`sub_grid`."""
+        return sub_grid(self.grid, self.group_split)
+
+    @property
+    def group_rounds(self) -> int:
+        """Sequential rounds of group execution: ``gr*gc`` groups run
+        concurrently on disjoint sub-grids, the rest time-multiplex."""
+        gr, gc = self.group_split
+        return math.ceil(self.group / (gr * gc))
+
+    def tile_passes(self, tile: "TileMapping") -> Tuple[int, int, int, int]:
+        """Executed pass structure ``(ic_t, ar_c, oc_t, ac_c)`` of a tile,
+        per group.  ``ar_c``/``ac_c`` are the MAPPING's sequential pass
+        counts; the executed channel block is re-derived as
+        ``ceil(depth / ar_c)`` because SDK-style tiles whose unrolled
+        window exceeds AR multiplex *rows* (not channels) over their
+        ``ar_c`` passes — re-deriving keeps executed passes == accounted
+        passes for every algorithm (DESIGN.md §3 equivalence contract)."""
+        oc_g = self.layer.oc // self.group
+        ic_t = math.ceil(tile.depth / tile.ar_c)
+        oc_t = min(tile.oc_t, oc_g)
+        ac_c = math.ceil(oc_g / oc_t)
+        return ic_t, tile.ar_c, oc_t, ac_c
+
+    @property
     def n_windows(self) -> int:
         return sum(t.n_windows for t in self.tiles) * self.group
 
@@ -236,10 +271,9 @@ class LayerMapping:
     def active_macros(self) -> int:
         """Macros actually used (idle ones are power-gated, §IV-E)."""
         gr, gc = self.group_split
-        sub_r = max(1, self.grid.r // gr)
-        sub_c = max(1, self.grid.c // gc)
-        used_r = max(min(t.ar_c, sub_r) for t in self.tiles)
-        used_c = max(min(t.ac_c, sub_c) for t in self.tiles)
+        sub = self.sub_grid
+        used_r = max(min(t.ar_c, sub.r) for t in self.tiles)
+        used_c = max(min(t.ac_c, sub.c) for t in self.tiles)
         g_par = min(self.group, gr * gc)
         return min(self.grid.p, used_r * used_c * g_par)
 

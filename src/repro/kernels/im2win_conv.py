@@ -117,17 +117,9 @@ def n_cycles(o_h: int, o_w: int, th: int, tw: int, batch: int = 1) -> int:
 
 def _tile_passes(mapping: LayerMapping, tile) -> Tuple[int, int, int, int]:
     """(ic_t, ar_c, oc_t, ac_c) of a tile's sequential array passes, per
-    group.  ``ar_c`` is the MAPPING's stored pass count — for SDK-style
-    tiles whose unrolled window exceeds AR it multiplexes *rows*, not
-    channels, so the executed channel block is re-derived as
-    ``ceil(kept / ar_c)`` to keep grid size == the accounted cycles."""
-    oc_g = mapping.layer.oc // mapping.group
-    kept = tile.depth
-    ar_c = tile.ar_c
-    ic_t = math.ceil(kept / ar_c)
-    oc_t = min(tile.oc_t, oc_g)
-    ac_c = math.ceil(oc_g / oc_t)
-    return ic_t, ar_c, oc_t, ac_c
+    group — now shared executor logic on the mapping itself (the
+    macro-parallel executor blocks the same passes over the grid)."""
+    return mapping.tile_passes(tile)
 
 
 def _tile_grid(layer, tile) -> Tuple[int, int, int, int, int, int]:
@@ -145,34 +137,90 @@ def _tile_grid(layer, tile) -> Tuple[int, int, int, int, int, int]:
     return step_y, step_x, ny, nx, lim_y, lim_x
 
 
-def _sdk_kernel(x_ref, w_ref, o_ref, *, s, k_h, k_w, pw_h, pw_w, py, px,
-                step_y, step_x, nx, lim_y, lim_x):
-    """One grid step == one window load of one (ic_t x oc_t) array pass."""
-    wi = pl.program_id(2)
+def _window_origin(wi, *, step_y, step_x, nx, lim_y, lim_x):
+    """Border-clamped (y0, x0) of window `wi` in the ceil-form raster."""
     y0 = jnp.minimum((wi // nx) * step_y, lim_y)
     x0 = jnp.minimum((wi % nx) * step_x, lim_x)
+    return y0, x0
 
-    @pl.when(wi == 0)
-    def _init():                     # o block is revisited across windows
-        o_ref[...] = jnp.zeros_like(o_ref)
 
-    win = x_ref[:, :, pl.ds(y0, pw_h), pl.ds(x0, pw_w)]
+def _window_matmuls(win, w_ref, *, s, k_h, k_w, py, px):
+    """The window's k_h*k_w unrolled shift-matmuls (MXU passes): win
+    (b, ic_t, pw_h, pw_w) x kernel block -> (b, oc_t, py, px) f32.
+    Shared by the whole-array and window-blocked kernels so the two
+    tilings cannot drift."""
     b, oc_t = win.shape[0], w_ref.shape[3]
     acc = jnp.zeros((b * py * px, oc_t), jnp.float32)
-    for dy in range(k_h):            # unrolled shift-matmuls (MXU passes)
+    for dy in range(k_h):
         for dx in range(k_w):
             patch = win[:, :, dy:dy + (py - 1) * s + 1:s,
                         dx:dx + (px - 1) * s + 1:s]
             patch = patch.transpose(0, 2, 3, 1).reshape(b * py * px, -1)
             acc += jnp.dot(patch, w_ref[dy, dx],
                            preferred_element_type=jnp.float32)
-    vals = acc.reshape(b, py, px, oc_t).transpose(0, 3, 1, 2)
+    return acc.reshape(b, py, px, oc_t).transpose(0, 3, 1, 2)
+
+
+def _sdk_kernel(x_ref, w_ref, o_ref, *, s, k_h, k_w, pw_h, pw_w, py, px,
+                step_y, step_x, nx, lim_y, lim_x):
+    """One grid step == one window load of one (ic_t x oc_t) array pass."""
+    wi = pl.program_id(2)
+    y0, x0 = _window_origin(wi, step_y=step_y, step_x=step_x, nx=nx,
+                            lim_y=lim_y, lim_x=lim_x)
+
+    @pl.when(wi == 0)
+    def _init():                     # o block is revisited across windows
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    win = x_ref[:, :, pl.ds(y0, pw_h), pl.ds(x0, pw_w)]
+    vals = _window_matmuls(win, w_ref, s=s, k_h=k_h, k_w=k_w, py=py, px=px)
     o_ref[0, :, :, pl.ds(y0 // s, py), pl.ds(x0 // s, px)] = \
         vals.astype(o_ref.dtype)
 
 
+def _sdk_kernel_blocked(x_hbm, w_ref, o_hbm, xwin, ovals, in_sem, out_sem,
+                        *, s, k_h, k_w, pw_h, pw_w, py, px, step_y, step_x,
+                        nx, lim_y, lim_x, ic_t, oc_t):
+    """Window-blocked variant of :func:`_sdk_kernel`: x and the output
+    stay in HBM (``pl.ANY``); each grid step DMAs exactly one window
+    patch (b, ic_t, pw_h, pw_w) into VMEM scratch and one output tile
+    (b, oc_t, py, px) back out.  VMEM per step is the window working set
+    — independent of the feature-map size, so big Inception / DenseNet
+    layers fit where whole-array blocks would not.  Window origins are
+    border-clamped to the stride grid, which BlockSpec index maps cannot
+    express (blocks overlap); the DMA path is the general form."""
+    ci = pl.program_id(0)
+    oi = pl.program_id(1)
+    wi = pl.program_id(2)
+    y0, x0 = _window_origin(wi, step_y=step_y, step_x=step_x, nx=nx,
+                            lim_y=lim_y, lim_x=lim_x)
+    load = pltpu.make_async_copy(
+        x_hbm.at[:, pl.ds(ci * ic_t, ic_t), pl.ds(y0, pw_h),
+                 pl.ds(x0, pw_w)],
+        xwin, in_sem)
+    load.start()
+    load.wait()
+    ovals[...] = _window_matmuls(xwin[...], w_ref, s=s, k_h=k_h, k_w=k_w,
+                                 py=py, px=px)
+    store = pltpu.make_async_copy(
+        ovals,
+        o_hbm.at[ci, :, pl.ds(oi * oc_t, oc_t), pl.ds(y0 // s, py),
+                 pl.ds(x0 // s, px)],
+        out_sem)
+    store.start()
+    store.wait()
+
+
+def _vmem_bytes_whole(b, ic_t, oc_t, layer) -> int:
+    """f32 VMEM working set of one whole-array-block grid step."""
+    return 4 * (b * ic_t * layer.i_h * layer.i_w
+                + layer.k_h * layer.k_w * ic_t * oc_t
+                + b * oc_t * layer.o_h * layer.o_w)
+
+
 def sdk_conv(mapping: LayerMapping, x: jnp.ndarray, kernel: jnp.ndarray,
-             *, interpret: bool = False) -> jnp.ndarray:
+             *, interpret: bool = False, block: str = "auto",
+             vmem_budget: int = 8 * 1024 * 1024) -> jnp.ndarray:
     """Execute a convolution exactly as `mapping` prescribes, on the MXU.
 
     Same contract as cnn.cim_conv2d: x (batch, ic, i_h, i_w) pre-padded,
@@ -185,6 +233,12 @@ def sdk_conv(mapping: LayerMapping, x: jnp.ndarray, kernel: jnp.ndarray,
     weights (zero partial products), and each channel pass writes its own
     slot of a leading accumulator axis that is summed on the host — the
     shift-and-add partial-sum accumulation of Fig 3.
+
+    ``block`` picks the tiling: "whole" keeps the full feature map and
+    OFM as VMEM blocks (fastest when they fit), "window" DMAs one
+    window patch / output tile per grid step (:func:`_sdk_kernel_blocked`
+    — VMEM use independent of layer size), "auto" chooses "window"
+    whenever the whole-array working set exceeds ``vmem_budget``.
     """
     layer = mapping.layer
     s = layer.stride
@@ -195,6 +249,8 @@ def sdk_conv(mapping: LayerMapping, x: jnp.ndarray, kernel: jnp.ndarray,
     if kernel.shape != (layer.k_h, layer.k_w, ic_g, layer.oc):
         raise ValueError(f"kernel shape {kernel.shape} != grouped layout "
                          f"{(layer.k_h, layer.k_w, ic_g, layer.oc)}")
+    if block not in ("auto", "whole", "window"):
+        raise ValueError(f"unknown block mode {block!r}")
 
     outs = []
     for gi in range(g):
@@ -218,25 +274,57 @@ def sdk_conv(mapping: LayerMapping, x: jnp.ndarray, kernel: jnp.ndarray,
             px = (w.pw_w - layer.k_w) // s + 1
             step_y, step_x, ny, nx, lim_y, lim_x = _tile_grid(layer, tile)
 
-            res = pl.pallas_call(
-                functools.partial(
-                    _sdk_kernel, s=s, k_h=layer.k_h, k_w=layer.k_w,
-                    pw_h=w.pw_h, pw_w=w.pw_w, py=py, px=px,
-                    step_y=step_y, step_x=step_x, nx=nx,
-                    lim_y=lim_y, lim_x=lim_x),
-                grid=(ar_c, ac_c, ny * nx),
-                in_specs=[
-                    pl.BlockSpec((b, ic_t, layer.i_h, layer.i_w),
-                                 lambda ci, oi, wi: (0, ci, 0, 0)),
-                    pl.BlockSpec((layer.k_h, layer.k_w, ic_t, oc_t),
-                                 lambda ci, oi, wi: (0, 0, ci, oi)),
-                ],
-                out_specs=pl.BlockSpec((1, b, oc_t, o_h, o_w),
-                                       lambda ci, oi, wi: (ci, 0, oi, 0, 0)),
-                out_shape=jax.ShapeDtypeStruct(
-                    (ar_c, b, oc_pad, o_h, o_w), jnp.float32),
-                interpret=interpret,
-            )(xt, kt)
+            mode = block
+            if mode == "auto":
+                mode = ("window"
+                        if _vmem_bytes_whole(b, ic_t, oc_t, layer)
+                        > vmem_budget else "whole")
+            if mode == "window":
+                res = pl.pallas_call(
+                    functools.partial(
+                        _sdk_kernel_blocked, s=s, k_h=layer.k_h,
+                        k_w=layer.k_w, pw_h=w.pw_h, pw_w=w.pw_w,
+                        py=py, px=px, step_y=step_y, step_x=step_x,
+                        nx=nx, lim_y=lim_y, lim_x=lim_x,
+                        ic_t=ic_t, oc_t=oc_t),
+                    grid=(ar_c, ac_c, ny * nx),
+                    in_specs=[
+                        pl.BlockSpec(memory_space=pl.ANY),
+                        pl.BlockSpec((layer.k_h, layer.k_w, ic_t, oc_t),
+                                     lambda ci, oi, wi: (0, 0, ci, oi)),
+                    ],
+                    out_specs=pl.BlockSpec(memory_space=pl.ANY),
+                    out_shape=jax.ShapeDtypeStruct(
+                        (ar_c, b, oc_pad, o_h, o_w), jnp.float32),
+                    scratch_shapes=[
+                        pltpu.VMEM((b, ic_t, w.pw_h, w.pw_w), jnp.float32),
+                        pltpu.VMEM((b, oc_t, py, px), jnp.float32),
+                        pltpu.SemaphoreType.DMA,
+                        pltpu.SemaphoreType.DMA,
+                    ],
+                    interpret=interpret,
+                )(xt, kt)
+            else:
+                res = pl.pallas_call(
+                    functools.partial(
+                        _sdk_kernel, s=s, k_h=layer.k_h, k_w=layer.k_w,
+                        pw_h=w.pw_h, pw_w=w.pw_w, py=py, px=px,
+                        step_y=step_y, step_x=step_x, nx=nx,
+                        lim_y=lim_y, lim_x=lim_x),
+                    grid=(ar_c, ac_c, ny * nx),
+                    in_specs=[
+                        pl.BlockSpec((b, ic_t, layer.i_h, layer.i_w),
+                                     lambda ci, oi, wi: (0, ci, 0, 0)),
+                        pl.BlockSpec((layer.k_h, layer.k_w, ic_t, oc_t),
+                                     lambda ci, oi, wi: (0, 0, ci, oi)),
+                    ],
+                    out_specs=pl.BlockSpec(
+                        (1, b, oc_t, o_h, o_w),
+                        lambda ci, oi, wi: (ci, 0, oi, 0, 0)),
+                    out_shape=jax.ShapeDtypeStruct(
+                        (ar_c, b, oc_pad, o_h, o_w), jnp.float32),
+                    interpret=interpret,
+                )(xt, kt)
             acc = acc + res.sum(axis=0)[:, :oc_g]
             c_base += kept
         outs.append(acc)

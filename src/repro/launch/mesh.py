@@ -11,6 +11,7 @@ state — the dry-run must set XLA_FLAGS before first jax init.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -28,6 +29,33 @@ def make_host_mesh():
 def data_axes(mesh) -> tuple:
     """Axes that carry the batch dimension (pod folds into data)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_macro_mesh(sub_r: int, sub_c: int, devices=None):
+    """Device mesh realizing a CIM macro (sub-)grid: axes ("row", "col")
+    where "row" carries channel passes and "col" oc passes — the axis
+    correspondence of ``TileMapping.cycles`` (DESIGN.md §3).
+
+    The mesh shape maximizes mr*mc over pairs with mr | sub_r,
+    mc | sub_c and mr*mc <= len(devices) (shard_map needs the macro axes
+    divisible by the mesh axes; leftover macros fold into the per-device
+    vmap), preferring taller meshes on ties.  Returns None when only a
+    degenerate 1x1 mesh fits — callers then run the pure-vmap
+    single-device path.
+    """
+    devices = list(jax.devices() if devices is None else devices)
+    n = len(devices)
+    best = (1, 1)
+    for mr in (d for d in range(min(sub_r, n), 0, -1) if sub_r % d == 0):
+        for mc in (d for d in range(1, min(sub_c, n // mr) + 1)
+                   if sub_c % d == 0):
+            if mr * mc > best[0] * best[1]:
+                best = (mr, mc)
+    mr, mc = best
+    if mr * mc <= 1:
+        return None
+    return jax.sharding.Mesh(
+        np.asarray(devices[:mr * mc]).reshape(mr, mc), ("row", "col"))
 
 
 def mesh_tag(mesh) -> str:

@@ -19,14 +19,16 @@ same rules cover every arch.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, TYPE_CHECKING, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.models.config import ArchConfig
 from .mesh import data_axes
+
+if TYPE_CHECKING:       # annotation-only: keep the LLM-arch stack out of
+    from repro.models.config import ArchConfig   # CNN/mapped_net imports
 
 
 def _path_names(path) -> Tuple[str, ...]:
@@ -196,3 +198,28 @@ def opt_shardings(param_sh, mesh):
 
 def replicated(mesh):
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# CIM macro-grid specs (cnn/mapped_net.py)
+# ---------------------------------------------------------------------------
+
+def macro_pass_specs() -> Tuple[P, P, P]:
+    """(patch, weight, out) PartitionSpecs for one macro-grid super-step
+    of the mapped-network executor on a ("row", "col") mesh
+    (launch.mesh.make_macro_mesh).
+
+    The operands of ``mapped_net._macro_step`` lead with the macro axes:
+    patches (sub_r, ...) shard over "row" (each macro row holds one
+    channel-pass block), weights (sub_r, sub_c, ...) over both axes (each
+    macro holds its own ic_t x oc_t block), and the output (sub_c, ...)
+    over "col" after the cross-row partial-sum reduction (the
+    shift-and-add accumulation becomes a psum over "row")."""
+    return P("row"), P("row", "col"), P("col")
+
+
+def macro_mesh_fits(mesh, sub_r: int, sub_c: int) -> bool:
+    """shard_map requires the macro axes to divide the mesh axes."""
+    return (mesh is not None
+            and sub_r % mesh.shape["row"] == 0
+            and sub_c % mesh.shape["col"] == 0)
