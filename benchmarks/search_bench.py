@@ -38,6 +38,19 @@ def _grid_search_pair(net: str, p_max_uncached: int):
 
 
 def run(full: bool = False):
+    # this module measures the *in-memory* memoization ratio; detach any
+    # REPRO_MAPPING_CACHE disk layer so cold timings aren't disk reads
+    # and warm timings aren't disk writes (the persistent layer has its
+    # own acceptance test in tests/test_search_cache.py)
+    prev_disk = memo.disk_cache_dir()
+    memo.set_disk_cache(None)
+    try:
+        return _run(full)
+    finally:
+        memo.set_disk_cache(prev_disk)
+
+
+def _run(full: bool = False):
     arr = ArrayConfig(512, 512)
     rows = []
     for net in NETS:

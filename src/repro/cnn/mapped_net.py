@@ -158,10 +158,15 @@ def _macro_step(p_blk: jnp.ndarray, w_blk: jnp.ndarray,
     On a ("row", "col") device mesh whose axes divide (sub_r, sub_c) the
     step runs under shard_map — macros become devices and the row
     reduction a psum; otherwise the macro axes are vmapped on one device.
+    A mesh with a leading "data" axis (make_macro_mesh(..., data=n))
+    additionally shards the batch axis over ``n`` replicas of the macro
+    grid — weights replicate across "data", and the psum stays confined
+    to "row", so each replica computes its own batch slice independently.
     """
-    if macro_mesh_fits(mesh, p_blk.shape[0], w_blk.shape[1]):
+    if macro_mesh_fits(mesh, p_blk.shape[0], w_blk.shape[1],
+                       batch=p_blk.shape[1]):
         from jax.experimental.shard_map import shard_map
-        p_spec, w_spec, o_spec = macro_pass_specs()
+        p_spec, w_spec, o_spec = macro_pass_specs(mesh)
 
         def local(p, w):
             part = _macro_grid(p, w).sum(0)          # local rows

@@ -1,7 +1,7 @@
 """Search memoization (the "mapping search must scale with mapped
 execution" requirement, VW-SDK / Fast-OverlaPIM).
 
-Two cache levels, both keyed on hashable frozen dataclasses:
+Three cache levels, all keyed on hashable frozen dataclasses:
 
 * **result cache** — full ``LayerMapping`` results of a per-layer search
   (``tetris_layer`` / ``vw_sdk`` / ...), keyed by
@@ -11,6 +11,21 @@ Two cache levels, both keyed on hashable frozen dataclasses:
   keyed by ``(layer, array)``.  One macro-grid sweep (Alg 2) re-scores
   the same candidate set under ~P_max.log(P_max) grids; the table is
   built once.
+* **disk cache** (opt-in) — an on-disk layer under the result cache so
+  a *fresh process* (a cold serving replica, a new ``benchmarks/run.py``
+  invocation) skips the window search entirely.  Enabled by pointing
+  ``REPRO_MAPPING_CACHE`` at a directory or calling
+  :func:`set_disk_cache`; entries are pickled ``LayerMapping`` values in
+  one file per key (sha256 of the canonical key repr, prefixed with
+  :data:`SCHEMA_VERSION`), written atomically (tmp file + rename) so
+  concurrent processes can share a directory.  Invalidation is by
+  schema-version bump: bump :data:`SCHEMA_VERSION` whenever the search
+  semantics or the ``LayerMapping`` data model change, and stale entries
+  simply stop matching (see DESIGN.md §7 for the full rules).
+
+Both in-memory caches are LRU-bounded (:func:`set_cache_limits`) so a
+long-lived serving process cannot grow them without limit; hit / miss /
+eviction and disk hit / miss / write counters are surfaced in ``stats``.
 
 Effective grids: a tile's cycle count under grid ``(r, c)`` is
 ``n_windows * ceil(ar_c / r) * ceil(ac_c / c)`` with ``ar_c <= IC`` and
@@ -21,29 +36,71 @@ re-stamped with the caller's real grid (`dataclasses.replace`), which is
 bit-identical to searching that grid directly (asserted in
 tests/test_search_cache.py).
 
-``disabled()`` turns the whole layer off (benchmarks time the uncached
-path through it); ``clear()`` + ``stats`` support cache-correctness
-tests and the search_bench module.
+``disabled()`` turns the whole layer off — including the disk layer —
+(benchmarks time the uncached path through it); ``clear()`` + ``stats``
+support cache-correctness tests and the search_bench module.  ``clear()``
+deliberately leaves the disk directory alone (persistence across
+processes is its whole point); use :func:`clear_disk_cache` to wipe it.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+import hashlib
+import os
+import pickle
+import tempfile
+from collections import OrderedDict
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional, Tuple
 
 from .types import MacroGrid
 
-_results: Dict[Any, Any] = {}
-_tables: Dict[Any, Any] = {}
+_results: "OrderedDict[Any, Any]" = OrderedDict()
+_tables: "OrderedDict[Any, Any]" = OrderedDict()
 _enabled: bool = True
 _aux_clears: list = []
 
-stats = {"result_hits": 0, "result_misses": 0,
-         "table_hits": 0, "table_misses": 0}
+# In-memory bounds: a whole densenet40 Alg-2 sweep at p_max=16 touches
+# ~9k distinct (algorithm, layer, effective-grid) result keys, so the
+# bound sits above one flagship sweep while still capping a long-lived
+# serving process; tables are per-(layer, array) and much heavier.
+_result_limit: int = 16384
+_table_limit: int = 256
+
+#: Bump whenever search semantics or the LayerMapping schema change —
+#: on-disk entries written under another version never match again.
+SCHEMA_VERSION = 1
+
+_ENV_VAR = "REPRO_MAPPING_CACHE"
+_UNSET = object()
+_disk_dir: Any = _UNSET        # _UNSET -> resolve from env on first use
+
+stats = {"result_hits": 0, "result_misses": 0, "result_evictions": 0,
+         "table_hits": 0, "table_misses": 0, "table_evictions": 0,
+         "disk_hits": 0, "disk_misses": 0, "disk_writes": 0,
+         "disk_errors": 0}
 
 
 def enabled() -> bool:
     return _enabled
+
+
+def set_cache_limits(results: Optional[int] = None,
+                     tables: Optional[int] = None) -> None:
+    """Re-bound the in-memory LRU caches (entries, not bytes).  Shrinking
+    below the current population evicts oldest-first immediately."""
+    global _result_limit, _table_limit
+    if results is not None:
+        _result_limit = results
+        _evict(_results, _result_limit, "result_evictions")
+    if tables is not None:
+        _table_limit = tables
+        _evict(_tables, _table_limit, "table_evictions")
+
+
+def cache_limits() -> Tuple[int, int]:
+    return _result_limit, _table_limit
 
 
 def register_cache_clear(fn: Callable[[], None]) -> None:
@@ -52,6 +109,7 @@ def register_cache_clear(fn: Callable[[], None]) -> None:
 
 
 def clear() -> None:
+    """Reset the in-memory caches and counters (not the disk layer)."""
     _results.clear()
     _tables.clear()
     for fn in _aux_clears:
@@ -62,7 +120,7 @@ def clear() -> None:
 
 @contextlib.contextmanager
 def disabled():
-    """Bypass (and do not populate) both cache levels inside the block."""
+    """Bypass (and do not populate) every cache level inside the block."""
     global _enabled
     prev = _enabled
     _enabled = False
@@ -78,32 +136,146 @@ def effective_grid(grid: MacroGrid, ic: int, oc: int) -> MacroGrid:
     return MacroGrid(min(grid.r, ic), min(grid.c, oc))
 
 
-def cached_result(key: Tuple, compute: Callable[[], Any]) -> Any:
+# ---------------------------------------------------------------------------
+# Disk layer
+# ---------------------------------------------------------------------------
+
+def set_disk_cache(path: Optional[os.PathLike]) -> None:
+    """Point the persistent result cache at ``path`` (created on first
+    write); ``None`` disables it, overriding the environment variable."""
+    global _disk_dir
+    _disk_dir = Path(path) if path is not None else None
+
+
+def disk_cache_dir() -> Optional[Path]:
+    """The active disk-cache directory (env ``REPRO_MAPPING_CACHE``
+    unless :func:`set_disk_cache` was called), or ``None``."""
+    global _disk_dir
+    if _disk_dir is _UNSET:
+        env = os.environ.get(_ENV_VAR)
+        _disk_dir = Path(env) if env else None
+    return _disk_dir
+
+
+def clear_disk_cache() -> int:
+    """Remove every entry of the active disk cache; returns the count."""
+    d = disk_cache_dir()
+    if d is None or not d.is_dir():
+        return 0
+    n = 0
+    for f in d.glob("*.mapping.pkl"):
+        try:
+            f.unlink()
+            n += 1
+        except OSError:
+            pass
+    return n
+
+
+def _disk_path(key: Tuple) -> Path:
+    canon = repr((SCHEMA_VERSION,) + key).encode()
+    return disk_cache_dir() / (hashlib.sha256(canon).hexdigest()
+                               + ".mapping.pkl")
+
+
+def _disk_load(key: Tuple) -> Any:
+    """Cached value for ``key`` or ``None`` (miss / corrupt / stale)."""
+    path = _disk_path(key)
+    try:
+        with open(path, "rb") as f:
+            version, value = pickle.load(f)
+    except FileNotFoundError:
+        stats["disk_misses"] += 1
+        return None
+    except Exception:
+        stats["disk_errors"] += 1
+        with contextlib.suppress(OSError):
+            path.unlink()           # corrupt entry: drop, recompute
+        return None
+    if version != SCHEMA_VERSION:   # belt-and-braces (version is keyed)
+        stats["disk_misses"] += 1
+        return None
+    stats["disk_hits"] += 1
+    return value
+
+
+def _disk_store(key: Tuple, value: Any) -> None:
+    d = disk_cache_dir()
+    path = _disk_path(key)
+    tmp = None
+    try:
+        d.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        with os.fdopen(fd, "wb") as f:
+            pickle.dump((SCHEMA_VERSION, value), f,
+                        protocol=pickle.HIGHEST_PROTOCOL)
+        os.replace(tmp, path)       # atomic: concurrent readers see
+        stats["disk_writes"] += 1   # either the old file or the new one
+    except Exception:               # full disk, unpicklable field, ...:
+        stats["disk_errors"] += 1   # the cache layer must never be fatal
+        if tmp is not None:
+            with contextlib.suppress(OSError):
+                os.unlink(tmp)
+
+
+# ---------------------------------------------------------------------------
+# In-memory LRU levels
+# ---------------------------------------------------------------------------
+
+def _evict(cache: "OrderedDict[Any, Any]", limit: int,
+           counter: str) -> None:
+    while len(cache) > max(0, limit):
+        cache.popitem(last=False)
+        stats[counter] += 1
+
+
+def _lru_get(cache: "OrderedDict[Any, Any]", key: Tuple,
+             hit_counter: str) -> Any:
+    out = cache[key]                # KeyError propagates to the caller
+    cache.move_to_end(key)
+    stats[hit_counter] += 1
+    return out
+
+
+def _lru_put(cache: "OrderedDict[Any, Any]", key: Tuple, value: Any,
+             limit: int, evict_counter: str) -> None:
+    cache[key] = value
+    cache.move_to_end(key)
+    _evict(cache, limit, evict_counter)
+
+
+def cached_result(key: Tuple, compute: Callable[[], Any],
+                  persist: bool = False) -> Any:
+    """Result-cache lookup; ``persist=True`` additionally consults /
+    populates the disk layer (when one is configured)."""
     if not _enabled:
         return compute()
     try:
-        out = _results[key]
-        stats["result_hits"] += 1
-        return out
+        return _lru_get(_results, key, "result_hits")
     except KeyError:
-        stats["result_misses"] += 1
+        pass
+    stats["result_misses"] += 1
+    disk = persist and disk_cache_dir() is not None
+    out = _disk_load(key) if disk else None
+    if out is None:
         out = compute()
-        _results[key] = out
-        return out
+        if disk:
+            _disk_store(key, out)
+    _lru_put(_results, key, out, _result_limit, "result_evictions")
+    return out
 
 
 def cached_table(key: Tuple, compute: Callable[[], Any]) -> Any:
     if not _enabled:
         return compute()
     try:
-        out = _tables[key]
-        stats["table_hits"] += 1
-        return out
+        return _lru_get(_tables, key, "table_hits")
     except KeyError:
-        stats["table_misses"] += 1
-        out = compute()
-        _tables[key] = out
-        return out
+        pass
+    stats["table_misses"] += 1
+    out = compute()
+    _lru_put(_tables, key, out, _table_limit, "table_evictions")
+    return out
 
 
 def memoized_search(name: str, layer, array, grid: MacroGrid,
@@ -112,10 +284,11 @@ def memoized_search(name: str, layer, array, grid: MacroGrid,
                     extra: Tuple = ()) -> Any:
     """The per-layer search wrapper every algorithm shares: scalar loop
     when disabled, else the vectorized search cached under the effective
-    grid, re-stamped with the caller's grid."""
+    grid (persistently, when a disk cache is configured), re-stamped with
+    the caller's grid."""
     if not _enabled:
         return scalar(grid)
     eff = effective_grid(grid, layer.ic, layer.oc)
     m = cached_result((name, layer, array, eff) + tuple(extra),
-                      lambda: vectorized(eff))
+                      lambda: vectorized(eff), persist=True)
     return m if m.grid == grid else dataclasses.replace(m, grid=grid)

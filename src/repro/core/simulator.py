@@ -130,6 +130,8 @@ def simulate_layer(m: LayerMapping, tech: TechConfig) -> LayerMetrics:
     g_par = min(m.group, gr * gc)
     seq_groups = math.ceil(m.group / g_par)
     t_clk = 1.0 / tech.clock_hz
+    sub_r = max(1, m.grid.r // gr)      # one group's sub-grid: loop-
+    sub_c = max(1, m.grid.c // gc)      # invariant across tiles
 
     lat_array = 0.0
     e_array = e_adc = e_acc = e_buf = e_wire = 0.0
@@ -137,8 +139,6 @@ def simulate_layer(m: LayerMapping, tech: TechConfig) -> LayerMetrics:
     total_loads_energy = 0          # loads counted across parallel macros
 
     for t in m.tiles:
-        sub_r = max(1, m.grid.r // gr)
-        sub_c = max(1, m.grid.c // gc)
         seq_loads = (t.n_windows * math.ceil(t.ar_c / sub_r)
                      * math.ceil(t.ac_c / sub_c))
         all_loads = t.n_windows * t.ar_c * t.ac_c          # work, not time

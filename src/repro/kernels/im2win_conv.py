@@ -31,9 +31,10 @@ marginal-window analogue; the step count matches the ceil form.
 """
 from __future__ import annotations
 
+import collections
 import functools
 import math
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -65,8 +66,10 @@ def _conv_kernel(x_ref, w_ref, o_ref, *, k_h, k_w, th, tw, o_h, o_w):
     j = pl.program_id(2)
     y0 = jnp.minimum(i * th, o_h - th)
     x0 = jnp.minimum(j * tw, o_w - tw)
-    win = pl.load(x_ref, (0, pl.ds(y0, th + k_h - 1),
-                          pl.ds(x0, tw + k_w - 1), slice(None)))
+    # leading batch index as a unit slice: interpret-mode load/store
+    # discharge rejects bare int indices mixed with dynamic slices
+    win = pl.load(x_ref, (pl.ds(0, 1), pl.ds(y0, th + k_h - 1),
+                          pl.ds(x0, tw + k_w - 1), slice(None)))[0]
     c = win.shape[-1]
     oc = w_ref.shape[-1]
     acc = jnp.zeros((th * tw, oc), jnp.float32)
@@ -75,8 +78,9 @@ def _conv_kernel(x_ref, w_ref, o_ref, *, k_h, k_w, th, tw, o_h, o_w):
             patch = win[dy:dy + th, dx:dx + tw, :].reshape(th * tw, c)
             acc += jnp.dot(patch, w_ref[dy, dx],
                            preferred_element_type=jnp.float32)
-    pl.store(o_ref, (0, pl.ds(y0, th), pl.ds(x0, tw), slice(None)),
-             acc.reshape(th, tw, oc).astype(o_ref.dtype))
+    pl.store(o_ref, (pl.ds(0, 1), pl.ds(y0, th), pl.ds(x0, tw),
+                     slice(None)),
+             acc.reshape(1, th, tw, oc).astype(o_ref.dtype))
 
 
 def im2win_conv(x: jnp.ndarray, w: jnp.ndarray, *,
@@ -180,7 +184,7 @@ def _sdk_kernel(x_ref, w_ref, o_ref, *, s, k_h, k_w, pw_h, pw_w, py, px,
 
 def _sdk_kernel_blocked(x_hbm, w_ref, o_hbm, xwin, ovals, in_sem, out_sem,
                         *, s, k_h, k_w, pw_h, pw_w, py, px, step_y, step_x,
-                        nx, lim_y, lim_x, ic_t, oc_t):
+                        ac_c, nw, nx, lim_y, lim_x, ic_t, oc_t):
     """Window-blocked variant of :func:`_sdk_kernel`: x and the output
     stay in HBM (``pl.ANY``); each grid step DMAs exactly one window
     patch (b, ic_t, pw_h, pw_w) into VMEM scratch and one output tile
@@ -188,27 +192,72 @@ def _sdk_kernel_blocked(x_hbm, w_ref, o_hbm, xwin, ovals, in_sem, out_sem,
     — independent of the feature-map size, so big Inception / DenseNet
     layers fit where whole-array blocks would not.  Window origins are
     border-clamped to the stride grid, which BlockSpec index maps cannot
-    express (blocks overlap); the DMA path is the general form."""
+    express (blocks overlap); the DMA path is the general form.
+
+    The DMAs are **double-buffered** (two scratch slots + paired
+    semaphores, slot = flat step parity): step t prefetches window
+    patch t+1 into the idle slot before waiting on its own patch, so the
+    next load overlaps this step's MXU shift-matmuls; the output-tile
+    store is likewise left in flight and only drained when its slot is
+    about to be reused (t+2) or the grid ends.  The grid — and therefore
+    the steps==cycles contract — is unchanged: pipelining shortens the
+    step, it does not add or remove steps."""
     ci = pl.program_id(0)
     oi = pl.program_id(1)
     wi = pl.program_id(2)
-    y0, x0 = _window_origin(wi, step_y=step_y, step_x=step_x, nx=nx,
-                            lim_y=lim_y, lim_x=lim_x)
-    load = pltpu.make_async_copy(
-        x_hbm.at[:, pl.ds(ci * ic_t, ic_t), pl.ds(y0, pw_h),
-                 pl.ds(x0, pw_w)],
-        xwin, in_sem)
-    load.start()
-    load.wait()
-    ovals[...] = _window_matmuls(xwin[...], w_ref, s=s, k_h=k_h, k_w=k_w,
-                                 py=py, px=px)
-    store = pltpu.make_async_copy(
-        ovals,
-        o_hbm.at[ci, :, pl.ds(oi * oc_t, oc_t), pl.ds(y0 // s, py),
-                 pl.ds(x0 // s, px)],
-        out_sem)
-    store.start()
-    store.wait()
+    total = pl.num_programs(0) * ac_c * nw
+    t = (ci * ac_c + oi) * nw + wi          # flat sequential step
+
+    def in_copy(step, slot):
+        """Async copy of window patch `step` into scratch slot `slot`."""
+        ci_s = step // (ac_c * nw)
+        wi_s = step % nw
+        y0, x0 = _window_origin(wi_s, step_y=step_y, step_x=step_x,
+                                nx=nx, lim_y=lim_y, lim_x=lim_x)
+        return pltpu.make_async_copy(
+            x_hbm.at[:, pl.ds(ci_s * ic_t, ic_t), pl.ds(y0, pw_h),
+                     pl.ds(x0, pw_w)],
+            xwin.at[slot], in_sem.at[slot])
+
+    def out_copy(step, slot):
+        """Async copy of output tile `step` out of scratch slot `slot`."""
+        ci_s = step // (ac_c * nw)
+        oi_s = step % (ac_c * nw) // nw
+        wi_s = step % nw
+        y0, x0 = _window_origin(wi_s, step_y=step_y, step_x=step_x,
+                                nx=nx, lim_y=lim_y, lim_x=lim_x)
+        return pltpu.make_async_copy(
+            ovals.at[slot],
+            o_hbm.at[ci_s, :, pl.ds(oi_s * oc_t, oc_t),
+                     pl.ds(y0 // s, py), pl.ds(x0 // s, px)],
+            out_sem.at[slot])
+
+    @pl.when(t == 0)
+    def _warmup():                          # pipeline prologue
+        in_copy(t, t % 2).start()
+
+    @pl.when(t + 1 < total)
+    def _prefetch():                        # overlap next load with compute
+        in_copy(t + 1, (t + 1) % 2).start()
+
+    in_copy(t, t % 2).wait()
+
+    @pl.when(t >= 2)
+    def _reclaim():                         # slot reused: drain store t-2
+        out_copy(t - 2, t % 2).wait()
+
+    ovals[t % 2] = _window_matmuls(xwin[t % 2], w_ref, s=s, k_h=k_h,
+                                   k_w=k_w, py=py, px=px)
+    out_copy(t, t % 2).start()
+
+    if total >= 2:                          # static: grid has a t-1 step
+        @pl.when(t == total - 1)
+        def _drain_prev():
+            out_copy(t - 1, (t - 1) % 2).wait()
+
+    @pl.when(t == total - 1)
+    def _drain_last():                      # pipeline epilogue
+        out_copy(t, t % 2).wait()
 
 
 def _vmem_bytes_whole(b, ic_t, oc_t, layer) -> int:
@@ -218,28 +267,16 @@ def _vmem_bytes_whole(b, ic_t, oc_t, layer) -> int:
                 + b * oc_t * layer.o_h * layer.o_w)
 
 
-def sdk_conv(mapping: LayerMapping, x: jnp.ndarray, kernel: jnp.ndarray,
-             *, interpret: bool = False, block: str = "auto",
-             vmem_budget: int = 8 * 1024 * 1024) -> jnp.ndarray:
-    """Execute a convolution exactly as `mapping` prescribes, on the MXU.
-
-    Same contract as cnn.cim_conv2d: x (batch, ic, i_h, i_w) pre-padded,
-    kernel (k_h, k_w, ic // G, oc) in lax grouped layout, output
-    (batch, oc, o_h, o_w); pruned channels are skipped.  One pallas_call
-    per (group, tile); within it the grid enumerates the mapping's
-    (channel pass, oc pass, window) loads, so total grid steps ==
-    the mapping's ceil-form cycle count (see sdk_conv_cycles).  Channel /
-    oc passes are padded to whole ``ic_t`` / ``oc_t`` blocks with zero
-    weights (zero partial products), and each channel pass writes its own
-    slot of a leading accumulator axis that is summed on the host — the
-    shift-and-add partial-sum accumulation of Fig 3.
-
-    ``block`` picks the tiling: "whole" keeps the full feature map and
-    OFM as VMEM blocks (fastest when they fit), "window" DMAs one
-    window patch / output tile per grid step (:func:`_sdk_kernel_blocked`
-    — VMEM use independent of layer size), "auto" chooses "window"
-    whenever the whole-array working set exceeds ``vmem_budget``.
-    """
+def _sdk_conv_traced(mapping: LayerMapping, x: jnp.ndarray,
+                     kernel: jnp.ndarray, *, interpret: bool = False,
+                     block: str = "auto",
+                     vmem_budget: int = 8 * 1024 * 1024) -> jnp.ndarray:
+    """Trace-time body of :func:`sdk_conv` — see it for the contract.
+    Builds one pallas_call per (group, tile); dispatch goes through
+    :func:`sdk_conv_jit` so the closures are built once per static
+    (mapping, shapes, flags) signature, not once per call."""
+    _trace_counts[_trace_key(mapping, x, kernel, interpret=interpret,
+                             block=block, vmem_budget=vmem_budget)] += 1
     layer = mapping.layer
     s = layer.stride
     b = x.shape[0]
@@ -285,8 +322,8 @@ def sdk_conv(mapping: LayerMapping, x: jnp.ndarray, kernel: jnp.ndarray,
                         _sdk_kernel_blocked, s=s, k_h=layer.k_h,
                         k_w=layer.k_w, pw_h=w.pw_h, pw_w=w.pw_w,
                         py=py, px=px, step_y=step_y, step_x=step_x,
-                        nx=nx, lim_y=lim_y, lim_x=lim_x,
-                        ic_t=ic_t, oc_t=oc_t),
+                        ac_c=ac_c, nw=ny * nx, nx=nx,
+                        lim_y=lim_y, lim_x=lim_x, ic_t=ic_t, oc_t=oc_t),
                     grid=(ar_c, ac_c, ny * nx),
                     in_specs=[
                         pl.BlockSpec(memory_space=pl.ANY),
@@ -296,11 +333,12 @@ def sdk_conv(mapping: LayerMapping, x: jnp.ndarray, kernel: jnp.ndarray,
                     out_specs=pl.BlockSpec(memory_space=pl.ANY),
                     out_shape=jax.ShapeDtypeStruct(
                         (ar_c, b, oc_pad, o_h, o_w), jnp.float32),
-                    scratch_shapes=[
-                        pltpu.VMEM((b, ic_t, w.pw_h, w.pw_w), jnp.float32),
-                        pltpu.VMEM((b, oc_t, py, px), jnp.float32),
-                        pltpu.SemaphoreType.DMA,
-                        pltpu.SemaphoreType.DMA,
+                    scratch_shapes=[       # two slots: double-buffered DMA
+                        pltpu.VMEM((2, b, ic_t, w.pw_h, w.pw_w),
+                                   jnp.float32),
+                        pltpu.VMEM((2, b, oc_t, py, px), jnp.float32),
+                        pltpu.SemaphoreType.DMA((2,)),
+                        pltpu.SemaphoreType.DMA((2,)),
                     ],
                     interpret=interpret,
                 )(xt, kt)
@@ -330,6 +368,62 @@ def sdk_conv(mapping: LayerMapping, x: jnp.ndarray, kernel: jnp.ndarray,
         outs.append(acc)
     return jnp.concatenate(outs, axis=1).astype(
         jnp.result_type(x, kernel))
+
+
+#: Host-side trace counter keyed by the static signature — retracing
+#: regressions are asserted in tests/test_sdk_conv.py.  Bounded like the
+#: memo caches: oldest signatures drop first (jit itself keeps its own
+#: cache, so the counter is diagnostics, not correctness).
+_trace_counts: Dict[Tuple, int] = collections.defaultdict(int)
+_TRACE_COUNT_LIMIT = 1024
+
+
+def _trace_key(mapping, x, kernel, **flags) -> Tuple:
+    while len(_trace_counts) >= _TRACE_COUNT_LIMIT:
+        del _trace_counts[next(iter(_trace_counts))]
+    return (mapping, x.shape, x.dtype, kernel.shape, kernel.dtype,
+            tuple(sorted(flags.items())))
+
+
+sdk_conv_jit = functools.partial(
+    jax.jit, static_argnums=(0,),
+    static_argnames=("interpret", "block", "vmem_budget"))(_sdk_conv_traced)
+sdk_conv_jit.__doc__ = (
+    """jit entry mirroring ``cim_conv2d_jit``: mapping (frozen dataclass)
+    and the tiling flags are static — the per-(group, tile) pallas_call
+    closures are built once per distinct (mapping, shapes, flags)
+    signature instead of on every call.""")
+
+
+def sdk_conv(mapping: LayerMapping, x: jnp.ndarray, kernel: jnp.ndarray,
+             *, interpret: bool = False, block: str = "auto",
+             vmem_budget: int = 8 * 1024 * 1024) -> jnp.ndarray:
+    """Execute a convolution exactly as `mapping` prescribes, on the MXU.
+
+    Same contract as cnn.cim_conv2d: x (batch, ic, i_h, i_w) pre-padded,
+    kernel (k_h, k_w, ic // G, oc) in lax grouped layout, output
+    (batch, oc, o_h, o_w); pruned channels are skipped.  One pallas_call
+    per (group, tile); within it the grid enumerates the mapping's
+    (channel pass, oc pass, window) loads, so total grid steps ==
+    the mapping's ceil-form cycle count (see sdk_conv_cycles).  Channel /
+    oc passes are padded to whole ``ic_t`` / ``oc_t`` blocks with zero
+    weights (zero partial products), and each channel pass writes its own
+    slot of a leading accumulator axis that is summed on the host — the
+    shift-and-add partial-sum accumulation of Fig 3.
+
+    ``block`` picks the tiling: "whole" keeps the full feature map and
+    OFM as VMEM blocks (fastest when they fit), "window" DMAs one
+    window patch / output tile per grid step with the loads and stores
+    double-buffered against the MXU (:func:`_sdk_kernel_blocked` — VMEM
+    use independent of layer size), "auto" chooses "window" whenever the
+    whole-array working set exceeds ``vmem_budget``.
+
+    Dispatches through :func:`sdk_conv_jit` (mapping and flags static):
+    repeat calls with the same shapes reuse the compiled program instead
+    of rebuilding every pallas_call closure.
+    """
+    return sdk_conv_jit(mapping, x, kernel, interpret=interpret,
+                        block=block, vmem_budget=vmem_budget)
 
 
 def sdk_conv_cycles(mapping: LayerMapping) -> int:

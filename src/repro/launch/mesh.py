@@ -31,20 +31,30 @@ def data_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
-def make_macro_mesh(sub_r: int, sub_c: int, devices=None):
+def make_macro_mesh(sub_r: int, sub_c: int, devices=None, *,
+                    data: int = 1):
     """Device mesh realizing a CIM macro (sub-)grid: axes ("row", "col")
     where "row" carries channel passes and "col" oc passes — the axis
     correspondence of ``TileMapping.cycles`` (DESIGN.md §3).
 
-    The mesh shape maximizes mr*mc over pairs with mr | sub_r,
-    mc | sub_c and mr*mc <= len(devices) (shard_map needs the macro axes
-    divisible by the mesh axes; leftover macros fold into the per-device
-    vmap), preferring taller meshes on ties.  Returns None when only a
-    degenerate 1x1 mesh fits — callers then run the pure-vmap
-    single-device path.
+    ``data > 1`` prepends a leading "data" axis of that size — ``data``
+    replicas of the (row, col) macro grid, each serving a slice of the
+    batch (DESIGN.md §7: throughput scaling under a fixed per-replica
+    macro budget; the partial-sum reduction stays confined to "row").
+
+    The (row, col) shape maximizes mr*mc over pairs with mr | sub_r,
+    mc | sub_c and data*mr*mc <= len(devices) (shard_map needs the macro
+    axes divisible by the mesh axes; leftover macros fold into the
+    per-device vmap), preferring taller meshes on ties.  Returns None
+    when only a degenerate 1x1x1 mesh fits — callers then run the
+    pure-vmap single-device path.
     """
+    if data < 1:
+        raise ValueError(f"data axis must be >= 1, got {data}")
     devices = list(jax.devices() if devices is None else devices)
-    n = len(devices)
+    n = len(devices) // data
+    if n < 1:
+        return None
     best = (1, 1)
     for mr in (d for d in range(min(sub_r, n), 0, -1) if sub_r % d == 0):
         for mc in (d for d in range(1, min(sub_c, n // mr) + 1)
@@ -52,10 +62,29 @@ def make_macro_mesh(sub_r: int, sub_c: int, devices=None):
             if mr * mc > best[0] * best[1]:
                 best = (mr, mc)
     mr, mc = best
-    if mr * mc <= 1:
+    if data * mr * mc <= 1:
         return None
-    return jax.sharding.Mesh(
-        np.asarray(devices[:mr * mc]).reshape(mr, mc), ("row", "col"))
+    dev = np.asarray(devices[:data * mr * mc])
+    if data > 1:
+        return jax.sharding.Mesh(dev.reshape(data, mr, mc),
+                                 ("data", "row", "col"))
+    return jax.sharding.Mesh(dev.reshape(mr, mc), ("row", "col"))
+
+
+def make_serving_mesh(sub_r: int, sub_c: int, batch: int, devices=None):
+    """Macro mesh for throughput serving: spend as many devices as the
+    (sub_r, sub_c) macro grid can absorb, then stack the *largest* "data"
+    axis that both divides the batch and fits the remaining device
+    budget.  Returns None when only one device is usable."""
+    devices = list(jax.devices() if devices is None else devices)
+    base = make_macro_mesh(sub_r, sub_c, devices)
+    per_replica = int(np.prod(base.devices.shape)) if base is not None else 1
+    best = None
+    for d in range(len(devices) // per_replica, 0, -1):
+        if batch % d == 0:
+            best = make_macro_mesh(sub_r, sub_c, devices, data=d)
+            break
+    return best if best is not None else base
 
 
 def mesh_tag(mesh) -> str:

@@ -1,4 +1,7 @@
-"""Serving driver: batched prefill + greedy decode loop.
+"""Serving driver: batched prefill + greedy decode loop (transformer
+scaffold).  For batched CNN serving through the macro-parallel mapped
+executor — images/s, batch-axis sharding, persistent mapping cache —
+see ``repro.launch.serve_cnn`` (DESIGN.md §7).
 
     python -m repro.launch.serve --arch mixtral_8x7b --smoke \
         --batch 4 --prompt-len 32 --gen 16

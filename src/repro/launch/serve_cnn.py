@@ -1,0 +1,141 @@
+"""Batched CNN serving driver: mapped-executor throughput (images/s).
+
+The CNN counterpart of ``launch/serve.py`` (which serves the transformer
+scaffold): map a benchmark conv stack once — reusing a persistent on-disk
+mapping cache so a cold replica skips the window search entirely — then
+drive steady-state batched forward passes through the macro-parallel
+executor (``cnn/mapped_net.py``, ``executor="mapped"``) and report
+images/s.  With multiple devices the batch shards over the "data" axis
+of the serving mesh while (row, col) carry the macro grid
+(``launch.mesh.make_serving_mesh``; DESIGN.md §7).
+
+    python -m repro.launch.serve_cnn --net cnn8 --batch 8 --steps 20 \
+        --p-max 4 --cache-dir /tmp/mapping-cache
+
+Prints one ``serve/...`` CSV row per the benchmark harness contract plus
+a human-readable summary (search time, cache stats, mesh, images/s).
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import time
+
+from repro.core import (ArrayConfig, MacroGrid, grid_search, map_net, memo,
+                        networks)
+
+
+def _parse_grid(text: str) -> MacroGrid:
+    r, c = text.lower().split("x")
+    return MacroGrid(int(r), int(c))
+
+
+def map_for_serving(net: str, array: ArrayConfig, algorithm: str,
+                    grid: MacroGrid = None, p_max: int = None,
+                    groups=(1, 2, 4)):
+    """Map ``net`` for serving (fixed grid or Alg 2 budget sweep) and
+    return ``(mapping, search_seconds)``.  With a warm disk cache
+    (``memo.set_disk_cache`` / ``REPRO_MAPPING_CACHE``) a cold process
+    performs zero search-table builds — asserted in tests/test_serve_cnn.
+    """
+    layers = networks.NETWORKS[net]()
+    kw = {"groups": groups} if algorithm == "TetrisG-SDK" else {}
+    t0 = time.perf_counter()
+    if p_max is not None:
+        mapping = grid_search(net, layers, array, p_max, algorithm,
+                              **kw).best
+    else:
+        mapping = map_net(net, layers, array, algorithm,
+                          grid or MacroGrid(), **kw)
+    return mapping, time.perf_counter() - t0
+
+
+def serving_mesh_for(net_mapping, batch: int):
+    """Largest mesh every layer of the mapping can shard onto: the mesh
+    macro axes must divide each layer's sub-grid (gcd across layers),
+    leftover devices stack along "data" when the batch divides."""
+    from repro.launch.mesh import make_serving_mesh
+    gr = gc = 0
+    for m in net_mapping.layers:
+        gr = math.gcd(gr, m.sub_grid.r)
+        gc = math.gcd(gc, m.sub_grid.c)
+    return make_serving_mesh(max(gr, 1), max(gc, 1), batch)
+
+
+def serve(net_mapping, batch: int, steps: int, warmup: int = 2,
+          mesh=None, seed: int = 0):
+    """Steady-state batched forward passes; returns (images/s, s/batch)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.cnn.mapped_net import mapped_net_apply, zero_pruned_kernels
+
+    rng = np.random.RandomState(seed)
+    ks = zero_pruned_kernels(net_mapping, [
+        jnp.asarray(rng.randn(m.layer.k_h, m.layer.k_w,
+                              m.layer.ic // m.group, m.layer.oc) * 0.1,
+                    jnp.float32) for m in net_mapping.layers])
+    first = net_mapping.layers[0].layer
+    x = jnp.asarray(rng.randn(batch, first.ic, first.i_h, first.i_w),
+                    jnp.float32)
+
+    def step():
+        return jax.block_until_ready(
+            mapped_net_apply(net_mapping, ks, x, mesh=mesh))
+
+    for _ in range(max(1, warmup)):          # compile + steady the caches
+        step()
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        step()
+    dt = (time.perf_counter() - t0) / steps
+    return batch / dt, dt
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--net", default="cnn8", choices=sorted(networks.NETWORKS))
+    ap.add_argument("--alg", default="TetrisG-SDK")
+    ap.add_argument("--ar", type=int, default=512)
+    ap.add_argument("--ac", type=int, default=512)
+    ap.add_argument("--grid", type=_parse_grid, default=None,
+                    help="fixed macro grid RxC (default: 1x1)")
+    ap.add_argument("--p-max", type=int, default=None,
+                    help="Alg 2 macro-budget sweep instead of --grid")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent mapping cache directory "
+                         "(default: $REPRO_MAPPING_CACHE)")
+    ap.add_argument("--no-mesh", action="store_true",
+                    help="force the single-device vmap path")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.cache_dir is not None:
+        memo.set_disk_cache(args.cache_dir)
+
+    mapping, search_s = map_for_serving(
+        args.net, ArrayConfig(args.ar, args.ac), args.alg,
+        grid=args.grid, p_max=args.p_max)
+    st = memo.stats
+    print(f"{args.net} [{args.alg}] grid={mapping.grid.r}x{mapping.grid.c} "
+          f"total_cycles={mapping.total_cycles} search={search_s*1e3:.1f}ms "
+          f"(table_builds={st['table_misses']} disk_hits={st['disk_hits']} "
+          f"disk_writes={st['disk_writes']})")
+
+    mesh = None if args.no_mesh else serving_mesh_for(mapping, args.batch)
+    tag = ("x".join(str(s) for s in mesh.devices.shape)
+           if mesh is not None else "vmap")
+    ips, dt = serve(mapping, args.batch, args.steps, warmup=args.warmup,
+                    mesh=mesh, seed=args.seed)
+    print(f"mesh={tag} batch={args.batch}: {ips:.1f} images/s "
+          f"({dt*1e3:.1f} ms/batch, executor=mapped)")
+    print(f"serve/{args.net}/b{args.batch},{dt*1e6:.1f},"
+          f"images_per_s={ips:.1f};mesh={tag};"
+          f"search_ms={search_s*1e3:.1f};table_builds={st['table_misses']}")
+
+
+if __name__ == "__main__":
+    main()

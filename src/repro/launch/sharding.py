@@ -204,22 +204,35 @@ def replicated(mesh):
 # CIM macro-grid specs (cnn/mapped_net.py)
 # ---------------------------------------------------------------------------
 
-def macro_pass_specs() -> Tuple[P, P, P]:
+def macro_pass_specs(mesh=None) -> Tuple[P, P, P]:
     """(patch, weight, out) PartitionSpecs for one macro-grid super-step
-    of the mapped-network executor on a ("row", "col") mesh
-    (launch.mesh.make_macro_mesh).
+    of the mapped-network executor on a ("row", "col") — or
+    ("data", "row", "col") — mesh (launch.mesh.make_macro_mesh).
 
     The operands of ``mapped_net._macro_step`` lead with the macro axes:
-    patches (sub_r, ...) shard over "row" (each macro row holds one
-    channel-pass block), weights (sub_r, sub_c, ...) over both axes (each
-    macro holds its own ic_t x oc_t block), and the output (sub_c, ...)
-    over "col" after the cross-row partial-sum reduction (the
-    shift-and-add accumulation becomes a psum over "row")."""
+    patches (sub_r, b, ...) shard over "row" (each macro row holds one
+    channel-pass block), weights (sub_r, sub_c, ...) over both macro axes
+    (each macro holds its own ic_t x oc_t block), and the output
+    (sub_c, b, ...) over "col" after the cross-row partial-sum reduction
+    (the shift-and-add accumulation becomes a psum over "row").
+
+    When the mesh carries a leading "data" axis, the batch axis of the
+    patches and the output additionally shards over it — each data
+    replica of the macro grid serves its own batch slice; weights are
+    replicated across "data" and the psum stays confined to "row"."""
+    if mesh is not None and "data" in mesh.axis_names:
+        return P("row", "data"), P("row", "col"), P("col", "data")
     return P("row"), P("row", "col"), P("col")
 
 
-def macro_mesh_fits(mesh, sub_r: int, sub_c: int) -> bool:
-    """shard_map requires the macro axes to divide the mesh axes."""
-    return (mesh is not None
-            and sub_r % mesh.shape["row"] == 0
-            and sub_c % mesh.shape["col"] == 0)
+def macro_mesh_fits(mesh, sub_r: int, sub_c: int,
+                    batch: Optional[int] = None) -> bool:
+    """shard_map requires the macro axes to divide the mesh axes — and,
+    on a mesh with a "data" axis, the batch to divide that axis."""
+    if (mesh is None
+            or sub_r % mesh.shape["row"]
+            or sub_c % mesh.shape["col"]):
+        return False
+    if "data" in mesh.axis_names:
+        return batch is not None and batch % mesh.shape["data"] == 0
+    return True

@@ -1,12 +1,37 @@
 """Memoized + vectorized search == the scalar reference search, bit for
-bit: same windows, tiles, cycles, and chosen grids (DESIGN.md §3)."""
+bit: same windows, tiles, cycles, and chosen grids (DESIGN.md §3) — plus
+the LRU bounds and the persistent on-disk result cache (DESIGN.md §7)."""
+import os
 import random
+import subprocess
+import sys
 
 import pytest
 
 from repro.core import (ArrayConfig, ConvLayerSpec, MacroGrid, grid_search,
                         map_layer, map_net, networks)
 from repro.core import baselines, memo, tetris
+
+
+@pytest.fixture
+def disk_cache(tmp_path):
+    """Point the disk layer at a temp dir; restore pristine state after."""
+    memo.clear()
+    memo.set_disk_cache(tmp_path)
+    try:
+        yield tmp_path
+    finally:
+        memo.set_disk_cache(None)
+        memo.clear()
+
+
+@pytest.fixture
+def cache_limits():
+    prev = memo.cache_limits()
+    try:
+        yield
+    finally:
+        memo.set_cache_limits(*prev)
 
 
 def _random_cases(n, seed=3):
@@ -83,6 +108,90 @@ def test_cache_hit_counts():
     map_net("cnn8", layers, arr, "Tetris-SDK")
     assert memo.stats["result_misses"] == misses   # second pass all hits
     assert memo.stats["result_hits"] >= len(layers)
+
+
+def test_lru_eviction_bound(cache_limits):
+    """The in-memory caches cannot grow past their bounds in a long-lived
+    process: oldest entries evict, counters surface it, results stay
+    correct (evicted entries just recompute)."""
+    memo.clear()
+    memo.set_cache_limits(results=4, tables=2)
+    layers = [ConvLayerSpec(f"l{i}", 12 + i, 12 + i, 3, 3, 8, 8)
+              for i in range(8)]
+    arr = ArrayConfig(256, 256)
+    first = [tetris.tetris_layer(l, arr, MacroGrid(2, 2)) for l in layers]
+    assert len(memo._results) <= 4 and len(memo._tables) <= 2
+    assert memo.stats["result_evictions"] >= 4
+    assert memo.stats["table_evictions"] >= 6
+    again = [tetris.tetris_layer(l, arr, MacroGrid(2, 2)) for l in layers]
+    assert first == again
+    # shrinking below the live population evicts immediately
+    memo.set_cache_limits(results=1)
+    assert len(memo._results) <= 1
+
+
+def test_disk_cache_round_trip(disk_cache):
+    """A populated disk cache survives an in-memory wipe: the re-search
+    is all disk hits, zero table builds, bit-identical mappings."""
+    layers = networks.cnn8()
+    arr = ArrayConfig(512, 512)
+    first = map_net("cnn8", layers, arr, "Tetris-SDK")
+    assert memo.stats["disk_writes"] > 0
+    files = list(disk_cache.glob("*.mapping.pkl"))
+    assert len(files) == memo.stats["disk_writes"]
+    memo.clear()                      # cold in-memory, warm disk
+    again = map_net("cnn8", layers, arr, "Tetris-SDK")
+    assert again == first
+    assert memo.stats["table_misses"] == 0
+    assert memo.stats["disk_hits"] > 0 and memo.stats["disk_writes"] == 0
+
+
+def test_disk_cache_corrupt_entry_recomputes(disk_cache):
+    """Truncated/garbage entries are dropped and recomputed, not fatal."""
+    layer = ConvLayerSpec("t", 18, 18, 3, 3, 8, 8)
+    arr = ArrayConfig(256, 256)
+    m = tetris.tetris_layer(layer, arr, MacroGrid(2, 2))
+    for f in disk_cache.glob("*.mapping.pkl"):
+        f.write_bytes(b"not a pickle")
+    memo.clear()
+    m2 = tetris.tetris_layer(layer, arr, MacroGrid(2, 2))
+    assert m2 == m
+    assert memo.stats["disk_errors"] > 0
+
+
+def test_disk_cache_bypassed_when_disabled(disk_cache):
+    with memo.disabled():
+        tetris.tetris_layer(ConvLayerSpec("t", 18, 18, 3, 3, 8, 8),
+                            ArrayConfig(256, 256), MacroGrid(2, 2))
+    assert memo.stats["disk_writes"] == 0
+    assert not list(disk_cache.glob("*.mapping.pkl"))
+
+
+def test_disk_cache_cold_process_densenet40(disk_cache):
+    """Acceptance anchor: a cold process with a warm on-disk cache maps
+    DenseNet40 at p_max=16 with ZERO search-table builds, and picks the
+    identical grid/cycles."""
+    warm = grid_search("densenet40", networks.densenet40(),
+                       ArrayConfig(512, 512), 16)
+    code = """
+from repro.core import ArrayConfig, grid_search, memo, networks
+r = grid_search("densenet40", networks.densenet40(),
+                ArrayConfig(512, 512), 16)
+assert memo.stats["table_misses"] == 0, memo.stats
+assert memo.stats["disk_hits"] > 0
+print("COLD-OK", r.best.grid.r, r.best.grid.c, r.best.total_cycles)
+"""
+    env = dict(os.environ,
+               REPRO_MAPPING_CACHE=str(disk_cache),
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src")]
+                   + sys.path))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    b = warm.best
+    assert out.stdout.split()[-4:] == [
+        "COLD-OK", str(b.grid.r), str(b.grid.c), str(b.total_cycles)]
 
 
 def test_paper_numbers_survive_memoization():

@@ -1,8 +1,12 @@
 """CIM simulator behaviours the paper reports (directional claims)."""
+import dataclasses
+
 import pytest
 
-from repro.core import ArrayConfig, MacroGrid, grid_search, map_net, networks
-from repro.core.simulator import TechConfig, chip_area, macro_area, simulate
+from repro.core import (ArrayConfig, ConvLayerSpec, MacroGrid, grid_search,
+                        map_layer, map_net, networks)
+from repro.core.simulator import (TechConfig, chip_area, macro_area,
+                                  simulate, simulate_layer)
 
 ARR = ArrayConfig(512, 512)
 
@@ -58,3 +62,46 @@ def test_energy_breakdown_positive():
     for l in m.layers:
         for k in ("array", "adc", "accum", "buffer", "interconnect"):
             assert l.breakdown[k] > 0
+
+
+def test_simulate_layer_grouped_scaling():
+    """Grouped-mapping regression (the sub_r/sub_c hoist must not change
+    semantics): every energy term is linear in ``m.group``; the array
+    latency is linear in ``seq_groups`` (parallel groups on disjoint
+    sub-grids are free); breakdown keys sum to the reported totals."""
+    tech = TechConfig()
+    grid = MacroGrid(2, 2)
+    base = map_layer(ConvLayerSpec("g", 18, 18, 3, 3, 32, 32),
+                     ArrayConfig(64, 64), "Tetris-SDK", grid)
+
+    def sim(**kw):
+        return simulate_layer(dataclasses.replace(base, **kw), tech)
+
+    one = sim(group=1, group_split=(1, 1))
+    two = sim(group=2, group_split=(1, 1))
+    assert two.energy_j == pytest.approx(2 * one.energy_j, rel=1e-12)
+    # latency: the array term scales with seq_groups (= group here), the
+    # IFM/OFM buffer+interconnect staging term is per-inference
+    assert two.breakdown["lat_array"] == pytest.approx(
+        2 * one.breakdown["lat_array"], rel=1e-12)
+    assert two.breakdown["lat_buffer"] == pytest.approx(
+        one.breakdown["lat_buffer"], rel=1e-12)
+
+    # 4 groups fully parallel on (2,2) disjoint sub-grids: seq_groups=1,
+    # so array latency stays put while energy still scales 4x vs the
+    # same-sub-grid single group
+    par1 = sim(group=1, group_split=(2, 2))
+    par4 = sim(group=4, group_split=(2, 2))
+    seq8 = sim(group=8, group_split=(2, 2))
+    assert par4.energy_j == pytest.approx(4 * par1.energy_j, rel=1e-12)
+    assert par4.breakdown["lat_array"] == pytest.approx(
+        par1.breakdown["lat_array"], rel=1e-12)
+    assert seq8.breakdown["lat_array"] == pytest.approx(
+        2 * par4.breakdown["lat_array"], rel=1e-12)
+
+    for m in (one, two, par4, seq8):
+        assert sum(m.breakdown[k] for k in
+                   ("array", "adc", "accum", "buffer", "interconnect")
+                   ) == pytest.approx(m.energy_j, rel=1e-12)
+        assert m.breakdown["lat_array"] + m.breakdown["lat_buffer"] == \
+            pytest.approx(m.latency_s, rel=1e-12)
