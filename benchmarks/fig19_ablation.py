@@ -8,11 +8,10 @@ from __future__ import annotations
 
 import math
 
-from repro.core import (ArrayConfig, ConvLayerSpec, LayerMapping, map_net,
-                        networks)
+from repro.core import ArrayConfig, LayerMapping, networks
 from repro.core import baselines, cycles as cyc, grouped, tetris
 from repro.core.simulator import simulate
-from repro.core.types import MacroGrid, NetworkMapping, TileMapping, Window
+from repro.core.types import MacroGrid, NetworkMapping, TileMapping
 
 from .common import Row, timed
 
@@ -54,17 +53,16 @@ def _do(layer, array, grid=MacroGrid(), **kw):
 def run(full: bool = False):
     layers = networks.cnn8()
     steps = [
-        ("vwc", lambda l, a, g: baselines.vwc_sdk(l, a, g)),
+        ("vwc", lambda ly, a, g: baselines.vwc_sdk(ly, a, g)),
         ("+SI", _si_only),
         ("+MW", _mw),
         ("+DO", _do),
-        ("+G", lambda l, a, g: grouped.tetrisg_layer(l, a, g)),
+        ("+G", lambda ly, a, g: grouped.tetrisg_layer(ly, a, g)),
     ]
     rows = []
-    prev = None
     for name, mapper in steps:
         def netmap():
-            ms = tuple(mapper(l, ARR, MacroGrid()) for l in layers)
+            ms = tuple(mapper(ly, ARR, MacroGrid()) for ly in layers)
             return NetworkMapping(name="cnn8", algorithm=name, array=ARR,
                                   layers=ms)
         net, us = timed(netmap)
@@ -72,5 +70,4 @@ def run(full: bool = False):
         der = (f"cycles={net.total_cycles};energy={sim.energy_j:.2e};"
                f"latency={sim.latency_s:.2e}")
         rows.append(Row(f"fig19/cnn8/{name}", us, der))
-        prev = net
     return rows

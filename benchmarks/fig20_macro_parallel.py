@@ -4,12 +4,15 @@ budgets P (64x64 macros, Alg 2 grid search).  Paper: best reductions
 
 Since PR 2 this benchmark also *executes* the macro parallelism it
 accounts for: the mapped-network executor (cnn/mapped_net.py) runs the
-best grid's NetworkMapping layer by layer with the macro grid realized
-as vmap/shard_map super-steps, and we report measured wall-clock
-speed-up at p_max in {1, 4, 16} next to the analytical cycle ratio.
-Per-layer executed step counts are asserted equal to
-``LayerMapping.cycles`` for every mapping this file touches (and for
-all four bench networks in the steps-equal-cycles row).
+best grid's NetworkMapping with the macro grid realized as
+vmap/shard_map super-steps, and we report measured wall-clock speed-up
+at p_max in {1, 4, 16} next to the analytical cycle ratio.  Since the
+NetworkPlan refactor the measured forward goes through a compiled plan
+(`repro.exec`, DESIGN.md §8): every row reports the fused one-dispatch
+wall-clock next to the per-layer loop's.  Per-layer executed step counts
+are asserted equal to ``LayerMapping.cycles`` for every mapping this
+file touches (at plan-compile time, and for all four bench networks in
+the steps-equal-cycles row).
 """
 from __future__ import annotations
 
@@ -22,33 +25,44 @@ import numpy as np
 from repro.core import (ArrayConfig, MacroGrid, grid_search, map_net,
                         networks)
 from repro.core.simulator import simulate
-from repro.cnn.mapped_net import (assert_steps_match, mapped_conv2d,
-                                  zero_pruned_kernels)
+from repro.cnn.mapped_net import assert_steps_match, zero_pruned_kernels
+from repro.exec import (apply_layer, compile_plan, execute_layerwise)
 
 from .common import Row, timed
 
 EXEC_BUDGETS = (1, 4, 16)
 
 
-def _mapped_walltime(net, reps: int = 3) -> float:
-    """us per full mapped-network forward (layer by layer, jit warm)."""
+def _mapped_walltime(net, reps: int = 3):
+    """(loop_us, fused_us, n_layers) per full mapped-network forward —
+    the same layerwise plan through per-layer jit dispatch vs one fused
+    program (the bench nets are representative layer sets; chained
+    forwards are covered by benchmarks/plan_bench.py)."""
+    plan = compile_plan(net, executor_policy="mapped", chained=False)
     rng = np.random.RandomState(0)
     ks = zero_pruned_kernels(net, [
         jnp.asarray(rng.randn(m.layer.k_h, m.layer.k_w,
                               m.layer.ic // m.group, m.layer.oc),
                     jnp.float32) for m in net.layers])
-    data = [(m, jnp.asarray(
-        rng.randn(1, m.layer.ic, m.layer.i_h, m.layer.i_w), jnp.float32), k)
-        for m, k in zip(net.layers, ks)]
+    xs = [jnp.asarray(rng.randn(1, m.layer.ic, m.layer.i_h, m.layer.i_w),
+                      jnp.float32) for m in net.layers]
+    n = len(net.layers)
 
-    def run_all():
-        jax.block_until_ready([mapped_conv2d(m, x, k) for m, x, k in data])
+    def loop():
+        jax.block_until_ready(
+            [apply_layer(plan, i, xs[i], ks[i]) for i in range(n)])
 
-    run_all()                                   # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        run_all()
-    return (time.perf_counter() - t0) / reps * 1e6
+    def fused():
+        jax.block_until_ready(execute_layerwise(plan, ks, xs))
+
+    out = []
+    for fn in (loop, fused):
+        fn()                                    # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fn()
+        out.append((time.perf_counter() - t0) / reps * 1e6)
+    return out[0], out[1], n
 
 
 def run(full: bool = False):
@@ -83,7 +97,7 @@ def run(full: bool = False):
                                algorithm="TetrisG-SDK",
                                groups=(1, 2, 4)).best
             assert_steps_match(best)            # executed steps == cycles
-            us = _mapped_walltime(best)
+            loop_us, us, n = _mapped_walltime(best)
             if p == 1:
                 base_cycles, base_us = best.total_cycles, us
             rows.append(Row(
@@ -91,7 +105,9 @@ def run(full: bool = False):
                 f"speedup={base_us / us:.2f};"
                 f"cycle_ratio={base_cycles / best.total_cycles:.2f};"
                 f"grid={best.grid.r}x{best.grid.c};"
-                f"cycles={best.total_cycles}"))
+                f"cycles={best.total_cycles};"
+                f"loop_us={loop_us:.1f};"
+                f"dispatches_loop={n};dispatches_plan=1"))
 
     # --- executed-schedule contract on all bench networks ----------------
     def check_all():

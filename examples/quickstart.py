@@ -6,7 +6,10 @@
    (mapped_conv2d, executed grid steps == the mapping's cycle count) —
    and check both against lax.conv;
 3. run the macro-grid search (Alg 2), execute the whole mapped network,
-   feed it to the CIM simulator, and print the summary table.
+   feed it to the CIM simulator, and print the summary table;
+4. compile the network into ONE execution plan (repro.exec) and run the
+   same forward as a single fused program — bit-identical, one host
+   dispatch instead of one per layer.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -57,4 +60,12 @@ print(f"\nAlg 2 over 8x 64x64 macros -> best grid "
       f"{net.grid.r}x{net.grid.c}, {net.total_cycles} cycles, "
       f"EDAP {sim.edap:.2e} J*s*m^2, {sim.active_macros} active macros; "
       f"mapped forward out {tuple(logits.shape)}")
+
+# --- 4. compile the whole network into one execution plan --------------
+from repro.exec import compile_plan, execute_plan
+
+plan = compile_plan(net, executor_policy="mapped")   # steps==cycles here
+fused = execute_plan(plan, ks, x0)                   # ONE jitted program
+assert bool(jnp.all(fused == logits)), "plan forward must be bit-identical"
+print("\n" + plan.describe())
 print("\n" + net.summary())

@@ -17,7 +17,6 @@ training continues during the fsync.
 from __future__ import annotations
 
 import json
-import os
 import shutil
 import threading
 from pathlib import Path

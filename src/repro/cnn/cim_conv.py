@@ -149,15 +149,19 @@ def build_weight_matrix(layer: ConvLayerSpec, kernel: jnp.ndarray,
     return W.reshape(ic_t * pw_h * pw_w, py * px * oc_t)
 
 
-def _cim_conv2d_traced(mapping: LayerMapping, x: jnp.ndarray,
-                       kernel: jnp.ndarray) -> jnp.ndarray:
-    """Convolve per the mapping (placement-batched).
+def cim_conv2d_traced(mapping: LayerMapping, x: jnp.ndarray,
+                      kernel: jnp.ndarray) -> jnp.ndarray:
+    """Convolve per the mapping (placement-batched) — the trace-time
+    body.  Public plan-consuming entry: `repro.exec.run` inlines it into
+    the whole-network program; stand-alone callers use
+    :func:`cim_conv2d` / :func:`cim_conv2d_jit`.
 
     x: (batch, ic, i_h, i_w) pre-padded; kernel in lax grouped layout
     (k_h, k_w, ic // G, oc) with G = mapping.group (for G=1 that is the
     ordinary dense HWIO kernel).  Returns (batch, oc, o_h, o_w).  Pruned
-    channels (depth-optimal tiles) are skipped — callers comparing against
-    an exact conv must zero the corresponding kernel slices (see tests).
+    channels — the trailing slice of each tile's channel range — are
+    skipped; callers comparing against an exact conv must zero the
+    corresponding kernel slices (see zero_pruned_kernels / tests).
     """
     layer = mapping.layer
     s = layer.stride
@@ -211,12 +215,14 @@ def _cim_conv2d_traced(mapping: LayerMapping, x: jnp.ndarray,
             OY, OX = scatter_indices(origins, py, px, s)
             buf = buf.at[:, :, :, OY, OX].set(prod)
         out = out + buf
-        c_base += tile.depth
+        # a tile's nominal channel range is kept + pruned: the pruned
+        # trailing slice is skipped here, not shifted into the next tile
+        c_base += tile.depth + tile.pruned_channels
     return out.reshape(b, layer.oc, o_h, o_w)
 
 
 cim_conv2d_jit = functools.partial(jax.jit, static_argnums=0)(
-    _cim_conv2d_traced)
+    cim_conv2d_traced)
 cim_conv2d_jit.__doc__ = (
     """jit entry point: the mapping (and with it every placement) is a
     static argument — LayerMapping is a frozen, hashable dataclass — so
@@ -225,7 +231,7 @@ cim_conv2d_jit.__doc__ = (
 
 def cim_conv2d(mapping: LayerMapping, x: jnp.ndarray,
                kernel: jnp.ndarray) -> jnp.ndarray:
-    """Convolve per the mapping — see :func:`_cim_conv2d_traced` for the
+    """Convolve per the mapping — see :func:`cim_conv2d_traced` for the
     layout contract.  Dispatches through :func:`cim_conv2d_jit`: one XLA
     compile per distinct (mapping, shapes) instead of per-op eager
     dispatch of every gather/matmul/scatter."""

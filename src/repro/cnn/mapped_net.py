@@ -23,6 +23,14 @@ rounds) and is asserted equal to ``LayerMapping.cycles`` for every layer
 — the equivalence contract that turns the Fig 20 speed-ups from
 accounting into execution.
 
+Whole-network entry points (``mapped_net_apply`` /
+``reference_net_apply``) are thin wrappers over the compiled-plan path
+(``repro.exec``, DESIGN.md §8): the chain is lowered once by
+``compile_plan`` (schedule, glue, sharding, steps==cycles — all at
+compile time) and executed as one jitted program.  This module owns the
+per-layer executor (``mapped_conv2d`` and its traced body) and the
+schedule derivation the plan compiler consumes.
+
 Numerics follow cnn/cim_conv.py: window loads of one congruent shape are
 gathered and multiplied in one batch (sequential in hardware, counted as
 such); each channel super-step writes a set-semantics buffer (overlapping
@@ -36,7 +44,7 @@ from __future__ import annotations
 import functools
 import math
 from dataclasses import dataclass
-from typing import Callable, List, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +53,7 @@ from repro.core.types import (LayerMapping, MacroGrid, NetworkMapping,
                               TileMapping)
 from repro.launch.sharding import macro_mesh_fits, macro_pass_specs
 from .cim_conv import (build_weight_matrix, gather_patches,
-                       placement_groups, reference_conv2d, scatter_indices)
+                       placement_groups, scatter_indices)
 
 
 # ---------------------------------------------------------------------------
@@ -221,12 +229,16 @@ def _tile_operands(mapping: LayerMapping, tile: TileMapping,
     return out
 
 
-def _mapped_conv2d_traced(mapping: LayerMapping, x: jnp.ndarray,
-                          kernel: jnp.ndarray, *, mesh=None) -> jnp.ndarray:
-    """Macro-parallel convolution per the mapping.  Same layout contract
-    as cnn.cim_conv.cim_conv2d: x (batch, ic, i_h, i_w) pre-padded,
-    kernel (k_h, k_w, ic // G, oc) in lax grouped layout, output
-    (batch, oc, o_h, o_w); pruned channels are skipped."""
+def mapped_conv2d_traced(mapping: LayerMapping, x: jnp.ndarray,
+                         kernel: jnp.ndarray, *, mesh=None) -> jnp.ndarray:
+    """Macro-parallel convolution per the mapping — the trace-time body.
+    Public plan-consuming entry: `repro.exec.run` inlines it into the
+    whole-network program; stand-alone callers use :func:`mapped_conv2d`
+    / :func:`mapped_conv2d_jit`.  Same layout contract as
+    cnn.cim_conv.cim_conv2d: x (batch, ic, i_h, i_w) pre-padded, kernel
+    (k_h, k_w, ic // G, oc) in lax grouped layout, output
+    (batch, oc, o_h, o_w); pruned channels (the trailing slice of each
+    tile's channel range) are skipped."""
     layer = mapping.layer
     b = x.shape[0]
     o_h, o_w = layer.o_h, layer.o_w
@@ -278,13 +290,15 @@ def _mapped_conv2d_traced(mapping: LayerMapping, x: jnp.ndarray,
                                  sh["OY"], sh["OX"]].set(vals)
             acc = acc + buf
         out = out + acc[:, :, :oc_g]
-        c_base += kept
+        # skip the tile's pruned trailing channels instead of shifting
+        # the next tile's range onto them
+        c_base += kept + tile.pruned_channels
     return out.reshape(b, layer.oc, o_h, o_w)
 
 
 mapped_conv2d_jit = functools.partial(
     jax.jit, static_argnums=(0,), static_argnames=("mesh",))(
-    _mapped_conv2d_traced)
+    mapped_conv2d_traced)
 mapped_conv2d_jit.__doc__ = (
     """jit entry: mapping (frozen dataclass) and mesh are static — one
     XLA program per distinct (mapping, mesh, shapes).""")
@@ -300,105 +314,72 @@ def mapped_conv2d(mapping: LayerMapping, x: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# Network forward pass
+# Network forward pass — thin wrappers over the compiled-plan path
 # ---------------------------------------------------------------------------
-
-def fit_spatial(x: jnp.ndarray, i_h: int, i_w: int) -> jnp.ndarray:
-    """Deterministic inter-layer adapter: 2x2 max-pool while the feature
-    map is >= 2x the next layer's (padded) input, then center pad / crop
-    to the exact size.  Mirrored by the reference composition so the
-    cross-check compares executors, not plumbing."""
-    while x.shape[-2] >= 2 * i_h and x.shape[-1] >= 2 * i_w:
-        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
-                                  (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
-    for ax, tgt in ((-2, i_h), (-1, i_w)):
-        d = tgt - x.shape[ax]
-        if d > 0:
-            pad = [(0, 0)] * x.ndim
-            pad[ax] = (d // 2, d - d // 2)
-            x = jnp.pad(x, pad)
-        elif d < 0:
-            lo = (-d) // 2
-            x = jax.lax.slice_in_dim(x, lo, lo + tgt, axis=x.ndim + ax)
-    return x
-
-
-def _center_crop(x: jnp.ndarray, h: int, w: int) -> jnp.ndarray:
-    y0 = (x.shape[-2] - h) // 2
-    x0 = (x.shape[-1] - w) // 2
-    return x[..., y0:y0 + h, x0:x0 + w]
-
-
-def _net_forward(net: NetworkMapping, kernels: Sequence[jnp.ndarray],
-                 x: jnp.ndarray,
-                 conv_fn: Callable[[LayerMapping, jnp.ndarray, jnp.ndarray],
-                                   jnp.ndarray],
-                 activation=None) -> jnp.ndarray:
-    """Layer-by-layer forward chaining: plain when the next layer's ic
-    equals this layer's oc, dense (DenseNet-style concat of the layer's
-    unpadded input with its output) when it equals their sum."""
-    mappings = net.layers
-    for i, m in enumerate(mappings):
-        lay = m.layer
-        if x.shape[1] != lay.ic:
-            raise ValueError(f"{lay.name}: input has {x.shape[1]} channels,"
-                             f" layer expects {lay.ic}")
-        xp = fit_spatial(x, lay.i_h, lay.i_w)
-        y = conv_fn(m, xp, kernels[i])
-        if activation is not None:
-            y = activation(y)
-        if i + 1 < len(mappings):
-            nxt = mappings[i + 1].layer
-            if nxt.ic == lay.oc:
-                x = y
-            elif nxt.ic == x.shape[1] + lay.oc:
-                skip = _center_crop(xp, y.shape[-2], y.shape[-1])
-                x = jnp.concatenate([skip, y], axis=1)
-            else:
-                raise ValueError(
-                    f"cannot chain {lay.name} (oc={lay.oc}, "
-                    f"carry={x.shape[1]}) into {nxt.name} (ic={nxt.ic})")
-        else:
-            x = y
-    return x
-
+#
+# Whole-network execution lives in repro.exec (DESIGN.md §8): a
+# NetworkMapping is lowered ONCE by `compile_plan` (executor choice,
+# schedule, inter-layer glue, sharding decisions, steps==cycles — all at
+# compile time) and `execute_plan` runs the forward as one jitted
+# program.  These wrappers keep the original signatures so every
+# equivalence test runs unchanged against the plan.  (repro.exec is
+# imported lazily: it consumes this module's traced bodies.)
 
 def mapped_net_apply(net: NetworkMapping, kernels: Sequence[jnp.ndarray],
                      x: jnp.ndarray, *, mesh=None,
                      activation=None) -> jnp.ndarray:
     """Forward an entire ``NetworkMapping`` through the macro-parallel
-    executor.  ``kernels[i]`` is layer i's kernel in that mapping's
-    grouped layout ``(k_h, k_w, ic // G_i, oc)``.  Asserts, per layer,
-    executed grid steps == ``LayerMapping.cycles``."""
-    assert_steps_match(net)
-    return _net_forward(
-        net, kernels, x,
-        lambda m, xx, kk: mapped_conv2d(m, xx, kk, mesh=mesh),
-        activation)
+    executor — now a wrapper over ``compile_plan``/``execute_plan`` with
+    every layer pinned to ``"mapped"``.  ``kernels[i]`` is layer i's
+    kernel in that mapping's grouped layout ``(k_h, k_w, ic // G_i,
+    oc)``.  Executed grid steps == ``LayerMapping.cycles`` is checked at
+    plan-compile time (memoized, so repeat calls pay nothing).
+    ``activation`` is a static jit argument hashed by identity — pass a
+    stable callable, not a fresh lambda per call."""
+    from repro.exec import compile_plan, execute_plan
+    plan = compile_plan(net, executor_policy="mapped", mesh=mesh,
+                        batch=x.shape[0] if mesh is not None else None)
+    return execute_plan(plan, kernels, x, mesh=mesh, activation=activation)
 
 
 def reference_net_apply(net: NetworkMapping,
                         kernels: Sequence[jnp.ndarray], x: jnp.ndarray, *,
                         activation=None) -> jnp.ndarray:
-    """Oracle composition: same chaining, lax.conv per layer (pruned
-    channels must be zeroed in ``kernels``, see zero_pruned_kernels)."""
-    return _net_forward(
-        net, kernels, x,
-        lambda m, xx, kk: reference_conv2d(m.layer, xx, kk,
-                                           groups=m.group),
-        activation)
+    """Oracle composition: the same compiled chain (glue and all),
+    lax.conv per layer (pruned channels must be zeroed in ``kernels``,
+    see zero_pruned_kernels)."""
+    from repro.exec import compile_plan
+    from repro.exec.run import execute_oracle
+    plan = compile_plan(net, executor_policy="reference")
+    return execute_oracle(plan, kernels, x, activation=activation)
 
 
 def zero_pruned_kernels(net: NetworkMapping,
                         kernels: Sequence[jnp.ndarray]
                         ) -> List[jnp.ndarray]:
-    """Zero each layer's pruned trailing input channels (the
-    retrained-network convention of the equivalence tests)."""
+    """Zero each tile's pruned input channels — the trailing slice of
+    that tile's nominal (kept + pruned) channel range, which is exactly
+    what the executors skip (the retrained-network convention of the
+    equivalence tests).  One trailing slice per *tile*, not one per
+    layer: with several pruned tiles the pruned channels interleave with
+    later tiles' kept ranges, and a single layer-trailing slice would
+    zero the wrong channels."""
     out = []
     for m, k in zip(net.layers, kernels):
-        pruned = sum(t.pruned_channels for t in m.tiles)
-        ic_g = m.layer.ic // m.group
-        if pruned:
-            k = k.at[:, :, ic_g - pruned:, :].set(0.0)
+        c_base = 0
+        for t in m.tiles:
+            c_base += t.depth
+            if t.pruned_channels:
+                k = k.at[:, :, c_base:c_base + t.pruned_channels, :].set(0.0)
+            c_base += t.pruned_channels
         out.append(k)
     return out
+
+
+def __getattr__(name: str):
+    # back-compat: the inter-layer glue moved to repro.exec.glue
+    if name in ("fit_spatial", "_center_crop"):
+        from repro.exec import glue
+        return glue.fit_spatial if name == "fit_spatial" else \
+            glue.center_crop
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

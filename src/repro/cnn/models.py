@@ -8,25 +8,34 @@ training side): every conv's kernel becomes the lax grouped layout
 
 Forward paths (``executor=``):
   * ``"reference"`` — lax.conv fast path (default without mappings)
-  * ``"cim"``       — cim_conv2d per the given LayerMappings: the
-    placement-batched reference executor (default with mappings)
-  * ``"mapped"``    — mapped_net.mapped_conv2d: the macro-parallel
-    executor (vmap/shard_map over the mapping's macro grid), so training
-    runs through the very path whose cycles the tables report
-    (DESIGN.md §3).
+  * ``"cim"``       — the placement-batched reference executor
+    (cim_conv2d; default with mappings)
+  * ``"mapped"``    — the macro-parallel executor (vmap/shard_map over
+    the mapping's macro grid), so training runs through the very path
+    whose cycles the tables report (DESIGN.md §3)
+  * ``"sdk"``       — the Pallas MXU path (interpret mode off-TPU)
+
+Every mapping-driven path resolves through a compiled execution plan
+(``repro.exec.compile_plan`` with ``chained=False`` — the model owns its
+own pooling / bias plumbing between convs, so the plan contributes the
+per-layer executor dispatch, the compile-time steps==cycles check, and
+the mesh-fit decisions; DESIGN.md §8).
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import ConvLayerSpec, LayerMapping
-from .cim_conv import cim_conv2d, reference_conv2d
-from .mapped_net import mapped_conv2d
+from repro.core.types import ConvLayerSpec, LayerMapping, NetworkMapping
+from .cim_conv import reference_conv2d
+
+#: apply_cnn executor -> plan executor policy ("reference" stays the raw
+#: lax.conv fast path, outside the plan).
+_PLAN_POLICY = {"cim": "reference", "mapped": "mapped", "sdk": "sdk"}
 
 
 @dataclass(frozen=True)
@@ -88,23 +97,34 @@ def apply_cnn(params: Dict, cfg: CNNConfig, x: jnp.ndarray,
     """x: (b, in_ch, H, W) -> logits (b, num_classes).
 
     ``executor`` selects the conv path (module docstring); None resolves
-    to "cim" when mappings are given, else "reference".  ``mesh`` is an
-    optional ("row", "col") device mesh for the mapped executor
+    to "cim" when mappings are given, else "reference".  Mapping-driven
+    executors resolve to a layerwise execution plan (repro.exec) — one
+    compiled dispatch table per (mappings, executor, mesh).  ``mesh`` is
+    an optional ("row", "col") device mesh for the mapped executor
     (launch.mesh.make_macro_mesh)."""
     if executor is None:
         executor = "reference" if mappings is None else "cim"
-    if executor not in ("reference", "cim", "mapped"):
+    if executor not in ("reference", "cim", "mapped", "sdk"):
         raise ValueError(f"unknown executor {executor!r}")
     if executor != "reference" and mappings is None:
         raise ValueError(f"executor={executor!r} needs mappings")
+    plan = None
+    if executor != "reference":
+        from repro.exec import apply_layer, compile_plan
+        net = NetworkMapping(
+            name=cfg.name, algorithm=mappings[0].algorithm,
+            array=mappings[0].array, layers=tuple(mappings),
+            grid=mappings[0].grid)
+        plan = compile_plan(net, executor_policy=_PLAN_POLICY[executor],
+                            mesh=mesh,
+                            batch=x.shape[0] if mesh is not None else None,
+                            chained=False)
     g = cfg.group
     for i, c in enumerate(cfg.convs):
         x = _pad(x, c.i_w)
         w, b = params["convs"][i]["w"], params["convs"][i]["b"]
-        if executor == "mapped":
-            y = mapped_conv2d(mappings[i], x, w, mesh=mesh)
-        elif executor == "cim":
-            y = cim_conv2d(mappings[i], x, w)
+        if plan is not None:
+            y = apply_layer(plan, i, x, w, mesh=mesh)
         else:
             y = reference_conv2d(c, x, w, groups=g)
         x = jax.nn.relu(y + b[None, :, None, None])

@@ -7,19 +7,21 @@ checked on a seeded synthetic image-classification task
 G in {1, 2, 4} under identical budgets and report accuracy deltas next to
 the mapping cycle counts (benchmarks/table2_grouped.py).
 
-``executor="mapped"`` (or "cim") trains through the mapping-driven
-executors instead of lax.conv: every conv of every training step runs
+``executor="mapped"`` (or "cim" / "sdk") trains through the
+mapping-driven executors instead of lax.conv: the executor name resolves
+to a compiled execution-plan policy (``repro.exec.compile_plan`` via
+``apply_cnn`` — DESIGN.md §8), so every conv of every training step runs
 exactly as its ``LayerMapping`` prescribes (macro-parallel super-steps
-for "mapped" — DESIGN.md §3), so the accuracy the study reports is
-measured on the same execution path whose cycles the tables count.
-Gradients flow through the executors' gather/matmul/scatter (exact;
-asserted against the lax.conv path in tests/test_mapped_net.py).
+for "mapped" — DESIGN.md §3) and the accuracy the study reports is
+measured on the same execution path whose cycles the tables count, with
+the steps==cycles check paid once at plan-compile time.  Gradients flow
+through the executors' gather/matmul/scatter (exact; asserted against
+the lax.conv path in tests/test_mapped_net.py).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +29,7 @@ import jax.numpy as jnp
 from repro.core.grouped import tetrisg_layer
 from repro.core.types import ArrayConfig, LayerMapping, MacroGrid
 from repro.data.synthetic import image_task
-from .models import CNNConfig, apply_cnn, cnn8_config, ensure_head, init_cnn
+from .models import CNNConfig, apply_cnn, ensure_head, init_cnn
 
 
 @dataclass
@@ -77,8 +79,8 @@ def train_cnn(cfg: CNNConfig, *, steps: int = 300, batch: int = 64,
 
     @jax.jit
     def step(params, opt, x, y):
-        l, grads = jax.value_and_grad(loss_fn)(params, cfg, x, y,
-                                               mappings, executor)
+        lval, grads = jax.value_and_grad(loss_fn)(params, cfg, x, y,
+                                                  mappings, executor)
         # Adam
         m = jax.tree.map(lambda m_, g: 0.9 * m_ + 0.1 * g, opt["m"], grads)
         v = jax.tree.map(lambda v_, g: 0.999 * v_ + 0.001 * g * g,
@@ -89,7 +91,7 @@ def train_cnn(cfg: CNNConfig, *, steps: int = 300, batch: int = 64,
             vh = v_ / (1 - 0.999 ** t)
             return p - lr * mh / (jnp.sqrt(vh) + 1e-8)
         params = jax.tree.map(upd, params, m, v)
-        return params, {"m": m, "v": v, "t": t}, l
+        return params, {"m": m, "v": v, "t": t}, lval
 
     opt = {"m": jax.tree.map(jnp.zeros_like, params),
            "v": jax.tree.map(jnp.zeros_like, params), "t": 0}

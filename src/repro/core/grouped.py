@@ -30,7 +30,6 @@ Invariants:
 """
 from __future__ import annotations
 
-import math
 from typing import Iterable, Optional, Tuple
 
 from .tetris import tetris_layer

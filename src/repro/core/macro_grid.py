@@ -12,9 +12,8 @@ distinct effective shapes — see benchmarks/search_bench.py.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from .types import (ArrayConfig, ConvLayerSpec, LayerMapping, MacroGrid,
                     NetworkMapping)
@@ -47,7 +46,7 @@ def map_network(name: str,
                 grid: MacroGrid = MacroGrid(),
                 algorithm: Optional[str] = None,
                 **kw) -> NetworkMapping:
-    mapped = tuple(layer_mapper(l, array, grid, **kw) for l in layers)
+    mapped = tuple(layer_mapper(ly, array, grid, **kw) for ly in layers)
     return NetworkMapping(name=name,
                           algorithm=algorithm or mapped[0].algorithm,
                           array=array, layers=mapped, grid=grid)

@@ -27,11 +27,10 @@ Invariants:
 """
 from __future__ import annotations
 
-import math
-from typing import Callable, Dict, Iterable, Optional, Sequence
+from typing import Callable, Sequence
 
 from . import baselines, grouped, tetris
-from .macro_grid import GridSearchResult, macro_grid_search, map_network
+from .macro_grid import GridSearchResult, macro_grid_search
 from .types import (ArrayConfig, ConvLayerSpec, LayerMapping, MacroGrid,
                     NetworkMapping)
 
@@ -71,7 +70,8 @@ def map_layer(layer: ConvLayerSpec, array: ArrayConfig,
 def map_net(name: str, layers: Sequence[ConvLayerSpec], array: ArrayConfig,
             algorithm: str = "TetrisG-SDK",
             grid: MacroGrid = MacroGrid(), **kw) -> NetworkMapping:
-    mapped = tuple(map_layer(l, array, algorithm, grid, **kw) for l in layers)
+    mapped = tuple(map_layer(ly, array, algorithm, grid, **kw)
+                   for ly in layers)
     return NetworkMapping(name=name, algorithm=algorithm, array=array,
                           layers=mapped, grid=grid)
 
@@ -80,6 +80,6 @@ def grid_search(name: str, layers: Sequence[ConvLayerSpec],
                 array: ArrayConfig, p_max: int,
                 algorithm: str = "TetrisG-SDK", **kw) -> GridSearchResult:
     """Alg 2 entry point."""
-    def mapper(l, a, g, **kwargs):
-        return map_layer(l, a, algorithm, g, **kwargs)
+    def mapper(ly, a, g, **kwargs):
+        return map_layer(ly, a, algorithm, g, **kwargs)
     return macro_grid_search(name, layers, array, mapper, p_max, **kw)

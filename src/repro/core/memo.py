@@ -22,6 +22,18 @@ Three cache levels, all keyed on hashable frozen dataclasses:
   schema-version bump: bump :data:`SCHEMA_VERSION` whenever the search
   semantics or the ``LayerMapping`` data model change, and stale entries
   simply stop matching (see DESIGN.md §7 for the full rules).
+  ``set_disk_cache(dir, max_bytes=...)`` (or
+  ``REPRO_MAPPING_CACHE_MAX_BYTES``) bounds the directory: every insert
+  prunes oldest-mtime entries first until the total fits (hits refresh
+  mtime, so this is an LRU over entries), counted in
+  ``stats["disk_evictions"]`` — a capped directory converges instead of
+  growing until a schema bump.
+
+Compiled network plans (:mod:`repro.exec.plan`) join the same cache via
+:func:`cached_plan`, keyed on (mapping, resolved executor policy, mesh
+shape, batch) under their own :data:`PLAN_VERSION` — a serving replica
+with a warm disk cache skips both the window search *and* plan
+compilation.
 
 Both in-memory caches are LRU-bounded (:func:`set_cache_limits`) so a
 long-lived serving process cannot grow them without limit; hit / miss /
@@ -52,7 +64,7 @@ import pickle
 import tempfile
 from collections import OrderedDict
 from pathlib import Path
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 from .types import MacroGrid
 
@@ -72,14 +84,21 @@ _table_limit: int = 256
 #: on-disk entries written under another version never match again.
 SCHEMA_VERSION = 1
 
+#: Separate version for compiled NetworkPlan entries (:func:`cached_plan`)
+#: — bump when the plan IR (exec/plan.py dataclasses) or the compile
+#: semantics change without the mapping schema moving.
+PLAN_VERSION = 1
+
 _ENV_VAR = "REPRO_MAPPING_CACHE"
+_MAX_BYTES_ENV_VAR = "REPRO_MAPPING_CACHE_MAX_BYTES"
 _UNSET = object()
 _disk_dir: Any = _UNSET        # _UNSET -> resolve from env on first use
+_disk_max_bytes: Any = _UNSET  # _UNSET -> resolve from env on first use
 
 stats = {"result_hits": 0, "result_misses": 0, "result_evictions": 0,
          "table_hits": 0, "table_misses": 0, "table_evictions": 0,
          "disk_hits": 0, "disk_misses": 0, "disk_writes": 0,
-         "disk_errors": 0}
+         "disk_evictions": 0, "disk_errors": 0}
 
 
 def enabled() -> bool:
@@ -140,11 +159,21 @@ def effective_grid(grid: MacroGrid, ic: int, oc: int) -> MacroGrid:
 # Disk layer
 # ---------------------------------------------------------------------------
 
-def set_disk_cache(path: Optional[os.PathLike]) -> None:
+def set_disk_cache(path: Optional[os.PathLike],
+                   max_bytes: Optional[int] = None) -> None:
     """Point the persistent result cache at ``path`` (created on first
-    write); ``None`` disables it, overriding the environment variable."""
-    global _disk_dir
+    write); ``None`` disables it, overriding the environment variable.
+    ``max_bytes`` caps the directory's total entry size: every insert
+    prunes least-recently-used entries (by mtime — hits refresh it)
+    until the cache fits; ``None`` defers to
+    ``REPRO_MAPPING_CACHE_MAX_BYTES`` (unbounded when that is unset
+    too)."""
+    global _disk_dir, _disk_max_bytes
+    if max_bytes is not None and max_bytes < 0:
+        raise ValueError(f"max_bytes must be >= 0, got {max_bytes} "
+                         f"(omit it for an unbounded cache)")
     _disk_dir = Path(path) if path is not None else None
+    _disk_max_bytes = _UNSET if max_bytes is None else max_bytes
 
 
 def disk_cache_dir() -> Optional[Path]:
@@ -155,6 +184,28 @@ def disk_cache_dir() -> Optional[Path]:
         env = os.environ.get(_ENV_VAR)
         _disk_dir = Path(env) if env else None
     return _disk_dir
+
+
+def disk_cache_max_bytes() -> Optional[int]:
+    """Active size cap of the disk cache, or ``None`` (unbounded).
+    A malformed ``REPRO_MAPPING_CACHE_MAX_BYTES`` raises a clear error —
+    silently running uncapped is the exact failure the cap prevents."""
+    global _disk_max_bytes
+    if _disk_max_bytes is _UNSET:
+        env = os.environ.get(_MAX_BYTES_ENV_VAR)
+        try:
+            _disk_max_bytes = int(env) if env else None
+        except ValueError:
+            raise ValueError(
+                f"{_MAX_BYTES_ENV_VAR}={env!r} is not an integer byte "
+                f"count (suffixes like '512M' are not supported)") \
+                from None
+        if _disk_max_bytes is not None and _disk_max_bytes < 0:
+            _disk_max_bytes = _UNSET
+            raise ValueError(
+                f"{_MAX_BYTES_ENV_VAR}={env!r} must be >= 0 "
+                f"(unset it for an unbounded cache)")
+    return _disk_max_bytes
 
 
 def clear_disk_cache() -> int:
@@ -195,6 +246,8 @@ def _disk_load(key: Tuple) -> Any:
     if version != SCHEMA_VERSION:   # belt-and-braces (version is keyed)
         stats["disk_misses"] += 1
         return None
+    with contextlib.suppress(OSError):
+        os.utime(path)              # refresh mtime: the LRU recency signal
     stats["disk_hits"] += 1
     return value
 
@@ -203,6 +256,7 @@ def _disk_store(key: Tuple, value: Any) -> None:
     d = disk_cache_dir()
     path = _disk_path(key)
     tmp = None
+    stored = False
     try:
         d.mkdir(parents=True, exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
@@ -211,11 +265,45 @@ def _disk_store(key: Tuple, value: Any) -> None:
                         protocol=pickle.HIGHEST_PROTOCOL)
         os.replace(tmp, path)       # atomic: concurrent readers see
         stats["disk_writes"] += 1   # either the old file or the new one
+        stored = True
     except Exception:               # full disk, unpicklable field, ...:
         stats["disk_errors"] += 1   # the cache layer must never be fatal
         if tmp is not None:
             with contextlib.suppress(OSError):
                 os.unlink(tmp)
+    if stored:
+        # outside the swallow-all handler: a misconfigured size cap
+        # (malformed env var) must surface, not count as a disk error
+        _disk_prune(keep=path)
+
+
+def _disk_prune(keep: Optional[Path] = None) -> None:
+    """mtime-LRU eviction on insert: drop oldest entries until the
+    directory's total entry size fits :func:`disk_cache_max_bytes`.  The
+    just-written entry (``keep``) is never evicted — a single oversized
+    entry must not thrash the cache it was stored into."""
+    limit = disk_cache_max_bytes()
+    d = disk_cache_dir()
+    if limit is None or d is None or not d.is_dir():
+        return
+    entries = []
+    total = 0
+    for f in d.glob("*.mapping.pkl"):
+        try:
+            st = f.stat()
+        except OSError:
+            continue                # concurrently evicted by a peer
+        total += st.st_size
+        if keep is None or f != keep:
+            entries.append((st.st_mtime, st.st_size, f))
+    entries.sort()                  # oldest mtime first
+    for _, size, f in entries:
+        if total <= limit:
+            break
+        with contextlib.suppress(OSError):
+            f.unlink()
+            total -= size
+            stats["disk_evictions"] += 1
 
 
 # ---------------------------------------------------------------------------
@@ -276,6 +364,15 @@ def cached_table(key: Tuple, compute: Callable[[], Any]) -> Any:
     out = compute()
     _lru_put(_tables, key, out, _table_limit, "table_evictions")
     return out
+
+
+def cached_plan(key: Tuple, compute: Callable[[], Any]) -> Any:
+    """Compiled-NetworkPlan cache (exec/plan.compile_plan): the result
+    cache — and the disk layer, when configured — keyed on (net mapping,
+    resolved executor policy, mesh shape, batch, flags) under
+    :data:`PLAN_VERSION`."""
+    return cached_result(("plan", PLAN_VERSION) + key, compute,
+                         persist=True)
 
 
 def memoized_search(name: str, layer, array, grid: MacroGrid,

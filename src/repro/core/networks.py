@@ -73,8 +73,8 @@ def densenet40(growth: int = 12, init_ch: int = 16) -> List[ConvLayerSpec]:
     ch = init_ch
     size = 32
     for b in range(3):
-        for l in range(12):
-            layers.append(_c(f"DN40-b{b+1}l{l+1}", size + 2, 3, ch, growth))
+        for li in range(12):
+            layers.append(_c(f"DN40-b{b+1}l{li+1}", size + 2, 3, ch, growth))
             ch += growth
         if b < 2:
             layers.append(_c(f"DN40-t{b+1}", size, 1, ch, ch))

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 from .types import (ArrayConfig, LayerMapping, MacroGrid, NetworkMapping)
 
@@ -200,7 +200,7 @@ def simulate(net: NetworkMapping,
     return SystemMetrics(
         name=net.name, algorithm=net.algorithm, grid=net.grid,
         active_macros=active,
-        latency_s=sum(l.latency_s for l in layers),
-        energy_j=sum(l.energy_j for l in layers),
+        latency_s=sum(m.latency_s for m in layers),
+        energy_j=sum(m.energy_j for m in layers),
         area_m2=chip_area(net.array, net.grid, tech),
         layers=layers)

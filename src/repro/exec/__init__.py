@@ -1,0 +1,25 @@
+"""Compiled execution plans: one IR for all three executors.
+
+`compile_plan` lowers a `NetworkMapping` once — executor choice per
+layer, super-step schedule (steps==cycles checked at compile time),
+inter-layer glue, sharding decisions — and `execute_plan` runs the whole
+forward as a single jitted program with cross-layer overlap.  See
+DESIGN.md §8 and the module docstrings of exec/plan.py / exec/run.py.
+
+    from repro.exec import compile_plan, execute_plan
+    plan = compile_plan(net_mapping, executor_policy="auto",
+                        mesh=mesh, batch=8)
+    y = execute_plan(plan, kernels, x, mesh=mesh)
+"""
+from .glue import GLUE_KINDS, center_crop, fit_spatial, resolve_chain
+from .plan import (EXECUTORS, LayerPlan, NetworkPlan, PolicyLike,
+                   compile_plan)
+from .run import (apply_layer, execute_layerwise, execute_looped,
+                  execute_oracle, execute_plan)
+
+__all__ = [
+    "GLUE_KINDS", "EXECUTORS", "LayerPlan", "NetworkPlan", "PolicyLike",
+    "apply_layer", "center_crop", "compile_plan", "execute_layerwise",
+    "execute_looped", "execute_oracle", "execute_plan", "fit_spatial",
+    "resolve_chain",
+]

@@ -1,0 +1,71 @@
+"""Inter-layer glue: the deterministic adapters between mapped layers.
+
+A `NetworkMapping` chains layers whose padded specs rarely line up
+exactly; the glue closes the gap in two orthogonal directions:
+
+* **spatial** — :func:`fit_spatial` 2x2-max-pools while the carry is
+  >= 2x the next layer's (padded) input, then center-pads / center-crops
+  to the exact size.  Deterministic in the *shapes* only, so it is
+  resolvable at plan-compile time and traces to a static op chain.
+* **channel** — :func:`resolve_chain` classifies how layer i feeds
+  layer i+1 from pure channel arithmetic: ``"chain"`` when the next
+  layer's ic equals this layer's oc, ``"concat"`` (DenseNet-style: the
+  layer's unpadded input is concatenated with its output) when it
+  equals their sum, and a clear error otherwise.
+
+Both are mirrored by the reference composition (`reference_net_apply`)
+so equivalence tests compare executors, not plumbing.  This module is a
+leaf — pure jax + stdlib — so every executor layer can import it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: Post-layer carry updates a plan can prescribe (LayerPlan.glue):
+#: "chain" — carry becomes the layer's output; "concat" — carry becomes
+#: concat(center-cropped layer input, output); "last" — final layer,
+#: the output IS the result.
+GLUE_KINDS = ("chain", "concat", "last")
+
+
+def fit_spatial(x: jnp.ndarray, i_h: int, i_w: int) -> jnp.ndarray:
+    """Deterministic inter-layer adapter: 2x2 max-pool while the feature
+    map is >= 2x the next layer's (padded) input, then center pad / crop
+    to the exact size.  Mirrored by the reference composition so the
+    cross-check compares executors, not plumbing."""
+    while x.shape[-2] >= 2 * i_h and x.shape[-1] >= 2 * i_w:
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+    for ax, tgt in ((-2, i_h), (-1, i_w)):
+        d = tgt - x.shape[ax]
+        if d > 0:
+            pad = [(0, 0)] * x.ndim
+            pad[ax] = (d // 2, d - d // 2)
+            x = jnp.pad(x, pad)
+        elif d < 0:
+            lo = (-d) // 2
+            x = jax.lax.slice_in_dim(x, lo, lo + tgt, axis=x.ndim + ax)
+    return x
+
+
+def center_crop(x: jnp.ndarray, h: int, w: int) -> jnp.ndarray:
+    """Center (h, w) spatial slice of x (..., H, W) with H >= h, W >= w."""
+    y0 = (x.shape[-2] - h) // 2
+    x0 = (x.shape[-1] - w) // 2
+    return x[..., y0:y0 + h, x0:x0 + w]
+
+
+def resolve_chain(name: str, oc: int, carry_c: int,
+                  nxt_name: str, nxt_ic: int) -> str:
+    """Classify how a layer with ``oc`` output channels (and ``carry_c``
+    carried input channels) feeds the next layer: ``"chain"`` or
+    ``"concat"``.  Raises the chaining error on any other arithmetic —
+    at plan-compile time, not mid-forward."""
+    if nxt_ic == oc:
+        return "chain"
+    if nxt_ic == carry_c + oc:
+        return "concat"
+    raise ValueError(
+        f"cannot chain {name} (oc={oc}, carry={carry_c}) into "
+        f"{nxt_name} (ic={nxt_ic})")

@@ -1,0 +1,249 @@
+"""`NetworkPlan` — one compiled execution-plan IR for all three executors.
+
+The paper's speedups come from *scheduling*: window configs are searched
+per layer, then executed across a fixed macro budget.  Before this module
+every call site re-derived that schedule ad hoc — `mapped_net_apply`
+walked a Python loop of per-layer super-steps, `serve_cnn` re-planned
+mesh fitting per layer per request, and the reference / mapped / Pallas
+executors each owned a private copy of the chaining + steps==cycles
+logic.  `compile_plan` lowers a `NetworkMapping` **once** into a static
+per-layer plan; `execute_plan` (exec/run.py) then runs the whole forward
+as ONE jitted program.
+
+Per layer the plan fixes, at compile time:
+
+* the **executor** — ``"reference"`` (cnn/cim_conv.py, placement-batched
+  oracle), ``"mapped"`` (cnn/mapped_net.py, macro-parallel super-steps),
+  or ``"sdk"`` (kernels/im2win_conv.py, Pallas MXU path) — selectable
+  per layer by a size/VMEM heuristic (``"auto"``) or explicit override;
+* the **super-step schedule** (`LayerSchedule`) with the steps==cycles
+  assertion evaluated here, at compile time, instead of on every
+  dispatch;
+* the **inter-layer glue** — plain chain / DenseNet concat classified
+  from channel arithmetic (exec/glue.py), so a mis-chained network fails
+  at compile, not mid-forward;
+* the **sharding decision** — whether the layer's sub-grid fits the
+  compile mesh (`macro_mesh_fits`), so dispatch never re-fits.
+
+Plans are frozen, hashable (static jit arguments) and picklable; they
+join the memo result/disk cache keyed on mapping + resolved policy +
+mesh shape + batch (`core/memo.cached_plan`), so a serving replica
+compiles each distinct (network, mesh, batch) once per process — or
+never, with a warm disk cache.  See DESIGN.md §8.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence, Tuple, Union
+
+import jax
+
+from repro.core import memo
+from repro.core.types import NetworkMapping
+from repro.cnn.mapped_net import LayerSchedule, check_steps, layer_schedule
+from repro.launch.sharding import macro_mesh_fits
+from .glue import resolve_chain
+
+#: Executors a plan can dispatch a layer to.
+EXECUTORS = ("reference", "mapped", "sdk")
+
+#: Anything compile_plan accepts as a policy: one name (or "auto") for
+#: every layer, a per-layer sequence of names, or a callable
+#: ``LayerMapping -> name``.
+PolicyLike = Union[str, Sequence[str], Callable]
+
+
+@dataclass(frozen=True)
+class LayerPlan:
+    """Compiled execution of ONE layer — everything dispatch used to
+    re-derive, fixed at compile time."""
+
+    mapping: object             # LayerMapping (frozen, hashable)
+    executor: str               # "reference" | "mapped" | "sdk"
+    schedule: LayerSchedule     # steps==cycles evidence (compile-time)
+    glue: str                   # "chain" | "concat" | "last" | "layerwise"
+    carry_c: int                # channels entering this layer
+    use_mesh: bool              # shard_map vs vmap, decided at compile
+    interpret: bool = False     # sdk: pallas interpret mode (off-TPU)
+    block: str = "auto"         # sdk: tiling mode
+    vmem_budget: int = 8 * 1024 * 1024
+
+
+@dataclass(frozen=True)
+class NetworkPlan:
+    """Static whole-network execution plan (a hashable jit argument).
+
+    ``mesh_axes`` records the compile mesh's (name, size) shape — the
+    Mesh object itself stays out of the IR so plans hash, pickle, and
+    disk-cache; `execute_plan` re-binds the live mesh and validates it
+    against these axes.  ``batch`` is the batch the sharding decisions
+    were made for (None: no data-axis sharding was requested).
+    """
+
+    net: NetworkMapping
+    layers: Tuple[LayerPlan, ...]
+    mesh_axes: Optional[Tuple[Tuple[str, int], ...]]
+    batch: Optional[int]
+    chained: bool = True
+
+    @property
+    def executors(self) -> Tuple[str, ...]:
+        return tuple(lp.executor for lp in self.layers)
+
+    @property
+    def total_steps(self) -> int:
+        """Compile-time super-step total == NetworkMapping.total_cycles."""
+        return sum(lp.schedule.steps for lp in self.layers)
+
+    @property
+    def host_dispatches(self) -> int:
+        """jit program launches per forward through the fused entries
+        (`execute_plan` for chains, `execute_layerwise` for layer sets):
+        always one — the per-layer loop (`execute_looped` /
+        `apply_layer`) launched ``len(self.layers)``."""
+        return 1
+
+    def describe(self) -> str:
+        execs = ",".join(f"{lp.mapping.layer.name}:{lp.executor}"
+                         for lp in self.layers)
+        tag = ("x".join(f"{n}={s}" for n, s in self.mesh_axes)
+               if self.mesh_axes else "vmap")
+        return (f"plan[{self.net.name}] layers={len(self.layers)} "
+                f"steps={self.total_steps} mesh={tag} "
+                f"dispatches/forward={self.host_dispatches} ({execs})")
+
+
+def mesh_axes(mesh) -> Optional[Tuple[Tuple[str, int], ...]]:
+    """Canonical (name, size) shape of a mesh — the form stored in the
+    IR, used in the plan cache key, and validated at execute time (one
+    definition so the three cannot drift)."""
+    if mesh is None:
+        return None
+    return tuple((str(n), int(s)) for n, s in mesh.shape.items())
+
+
+def _sdk_realizable(mapping) -> bool:
+    """sdk runs every pass and every group sequentially — it can only
+    stand in for the mapping when no macro/group parallelism is owed."""
+    from repro.kernels.im2win_conv import sdk_conv_cycles
+    return sdk_conv_cycles(mapping) == mapping.cycles
+
+
+def _auto_executor(mapping, *, backend: str) -> str:
+    """Per-layer heuristic: the Pallas MXU path on TPU when the mapping
+    owes no macro/group parallelism (its ``block="auto"`` tiling handles
+    the VMEM budget per layer size); the macro-parallel executor
+    whenever a non-degenerate sub-grid must be realized; otherwise the
+    placement-batched reference path (fewest ops — fastest
+    off-accelerator)."""
+    if backend == "tpu" and _sdk_realizable(mapping):
+        return "sdk"
+    if mapping.sub_grid.p > 1 or mapping.group_rounds < mapping.group:
+        return "mapped"
+    return "reference"
+
+
+def _resolve_policy(policy: PolicyLike, net: NetworkMapping, *,
+                    backend: str) -> Tuple[str, ...]:
+    if callable(policy):
+        per_layer = [policy(m) for m in net.layers]
+    elif isinstance(policy, str):
+        per_layer = [policy] * len(net.layers)
+    else:
+        per_layer = list(policy)
+        if len(per_layer) != len(net.layers):
+            raise ValueError(
+                f"policy lists {len(per_layer)} executors for "
+                f"{len(net.layers)} layers")
+    out = []
+    for name, m in zip(per_layer, net.layers):
+        if name == "auto":
+            name = _auto_executor(m, backend=backend)
+        if name not in EXECUTORS:
+            raise ValueError(f"unknown executor {name!r} "
+                             f"(expected one of {EXECUTORS} or 'auto')")
+        out.append(name)
+    return tuple(out)
+
+
+def _compile(net: NetworkMapping, execs: Tuple[str, ...], mesh,
+             batch: Optional[int], chained: bool, interpret: bool,
+             block: str, vmem_budget: int) -> NetworkPlan:
+    if (mesh is not None and "data" in mesh.axis_names
+            and batch is not None and batch % mesh.shape["data"]):
+        # refuse rather than silently vmap the whole net: ragged batches
+        # must pad to the data axis (launch.mesh.pad_to_data_axis /
+        # serve_cnn pad-and-mask)
+        raise ValueError(
+            f"batch {batch} does not divide the mesh data axis "
+            f"{mesh.shape['data']} — pad the batch to "
+            f"pad_to_data_axis(batch, mesh) or drop the data axis")
+    layers = []
+    carry_c = net.layers[0].layer.ic
+    for i, (m, ex) in enumerate(zip(net.layers, execs)):
+        lay = m.layer
+        check_steps(m)                      # steps==cycles, at compile time
+        if ex == "sdk" and not _sdk_realizable(m):
+            raise ValueError(
+                f"{lay.name}: executor 'sdk' runs passes/groups "
+                f"sequentially and cannot realize sub-grid "
+                f"{m.sub_grid.r}x{m.sub_grid.c} / {m.group_rounds} group "
+                f"rounds — use 'mapped'")
+        use_mesh = (ex == "mapped"
+                    and macro_mesh_fits(mesh, m.sub_grid.r, m.sub_grid.c,
+                                        batch=batch))
+        if chained:
+            if i + 1 < len(net.layers):
+                nxt = net.layers[i + 1].layer
+                glue = resolve_chain(lay.name, lay.oc, carry_c,
+                                     nxt.name, nxt.ic)
+            else:
+                glue = "last"
+        else:
+            glue = "layerwise"
+        layers.append(LayerPlan(
+            mapping=m, executor=ex, schedule=layer_schedule(m),
+            glue=glue, carry_c=carry_c, use_mesh=use_mesh,
+            interpret=interpret, block=block, vmem_budget=vmem_budget))
+        carry_c = net.layers[i + 1].layer.ic if i + 1 < len(net.layers) \
+            else lay.oc
+    return NetworkPlan(net=net, layers=tuple(layers),
+                       mesh_axes=mesh_axes(mesh), batch=batch,
+                       chained=chained)
+
+
+def compile_plan(net: NetworkMapping, *,
+                 executor_policy: PolicyLike = "auto",
+                 mesh=None, batch: Optional[int] = None,
+                 chained: bool = True,
+                 interpret: Optional[bool] = None, block: str = "auto",
+                 vmem_budget: int = 8 * 1024 * 1024) -> NetworkPlan:
+    """Lower ``net`` once into a :class:`NetworkPlan`.
+
+    ``executor_policy`` — ``"auto"`` (per-layer heuristic, see
+    `_auto_executor`), one executor name for every layer, a per-layer
+    sequence, or a callable ``LayerMapping -> name``.  ``mesh``/``batch``
+    fix the sharding decisions (`macro_mesh_fits` per layer, evaluated
+    here, never at dispatch); a batch that does not divide the mesh's
+    data axis is refused here — pad it first (`mesh.pad_to_data_axis`).  ``chained=False`` compiles a *layerwise* plan — per-layer
+    executor dispatch without inter-layer glue (the `apply_cnn` path,
+    which owns its own pooling/bias plumbing); such plans cannot be
+    passed to `execute_plan`.
+
+    Every layer's executed schedule is asserted equal to its
+    ``LayerMapping.cycles`` here (compile time), and a mis-chained
+    network raises the chaining error here too.  Results are memoized —
+    in memory and, when a disk cache is configured, across processes —
+    keyed on (net, resolved policy, mesh shape, batch, flags).
+    """
+    if not net.layers:
+        raise ValueError(f"{net.name}: cannot plan an empty network")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    execs = _resolve_policy(executor_policy, net,
+                            backend=jax.default_backend())
+    key = (net, execs, mesh_axes(mesh), batch, chained, interpret, block,
+           vmem_budget)
+    return memo.cached_plan(
+        key, lambda: _compile(net, execs, mesh, batch, chained,
+                              interpret, block, vmem_budget))

@@ -1,0 +1,221 @@
+"""Execute a :class:`NetworkPlan` — the single dispatch path behind
+`mapped_net_apply`, `train_cnn(executor=...)`, and `serve_cnn`.
+
+`execute_plan` runs the whole forward as **one jitted XLA program**: the
+plan (frozen, hashable) is a static argument, so the per-layer Python
+loops — super-steps, placement groups, glue — unroll at trace time and
+the runtime sees a single launch per forward instead of one per layer.
+Cross-layer overlap is *bounded, one layer deep*: each layer boundary
+threads the carry and the still-unconsumed kernels through
+`lax.optimization_barrier`, leaving exactly the next layer's
+kernel-side work (its shifted-weight-matrix blocks, its patch-gather
+indices) free to issue while this layer's cross-row `psum` drains.
+Without the barrier XLA hoists EVERY layer's kernel-derived tensors to
+the program start — all shifted weight matrices live at once — which
+measurably loses to the per-layer loop on deep concat stacks
+(benchmarks/plan_bench.py tracks both).  Inter-layer carry buffers live
+inside the program (reused/donated by the compiler rather than
+round-tripping through host dispatch); Python-loop dispatch survives
+only *between* forwards — within one, nothing serializes on the host.
+
+`execute_looped` keeps the pre-plan behavior — one jit launch per layer
+with eager glue between — as the measurement baseline for
+benchmarks/plan_bench.py's dispatch-count and wall-clock comparison.
+
+`apply_layer` dispatches ONE layer of a (possibly layerwise) plan
+through the per-executor jit entries — the `cnn/models.apply_cnn` path,
+which owns its own pooling/bias plumbing between convs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.cnn.cim_conv import cim_conv2d_jit, cim_conv2d_traced
+from repro.cnn.mapped_net import mapped_conv2d_jit, mapped_conv2d_traced
+from .glue import center_crop, fit_spatial
+from .plan import LayerPlan, NetworkPlan, mesh_axes
+
+
+def _layer_conv(lp: LayerPlan, x: jnp.ndarray, kernel: jnp.ndarray,
+                mesh, *, jitted: bool) -> jnp.ndarray:
+    """Dispatch one layer to its planned executor — traced bodies when
+    inlining into the whole-forward program, jit entries when launched
+    stand-alone (`execute_looped` / `apply_layer`)."""
+    m = lp.mapping
+    mesh = mesh if lp.use_mesh else None
+    if lp.executor == "mapped":
+        fn = mapped_conv2d_jit if jitted else mapped_conv2d_traced
+        return fn(m, x, kernel, mesh=mesh)
+    if lp.executor == "sdk":
+        from repro.kernels.im2win_conv import sdk_conv_jit, sdk_conv_traced
+        fn = sdk_conv_jit if jitted else sdk_conv_traced
+        return fn(m, x, kernel, interpret=lp.interpret, block=lp.block,
+                  vmem_budget=lp.vmem_budget)
+    fn = cim_conv2d_jit if jitted else cim_conv2d_traced
+    return fn(m, x, kernel)
+
+
+#: Cross-layer pipeline depth of the fused program: kernels of layers
+#: beyond ``i + 1 + _LOOKAHEAD`` are fenced behind the carry at layer
+#: i's boundary, so exactly one layer of kernel-side prep (weight-matrix
+#: blocks, gather indices) overlaps the current layer's psum drain while
+#: the live working set stays bounded.
+_LOOKAHEAD = 1
+
+
+@jax.custom_jvp
+def _fence(operands):
+    """`lax.optimization_barrier` with a differentiation rule: the fence
+    shapes the forward schedule only, so its tangent/cotangent is the
+    identity (this jax version implements no rule of its own)."""
+    return lax.optimization_barrier(operands)
+
+
+@_fence.defjvp
+def _fence_jvp(primals, tangents):
+    (operands,), (dots,) = primals, tangents
+    return _fence(operands), dots
+
+
+def _forward(plan: NetworkPlan, kernels, x: jnp.ndarray, mesh,
+             activation, *, jitted: bool, conv=None) -> jnp.ndarray:
+    """The planned forward chain.  Glue kinds were classified at compile
+    time (exec/glue.py); this only replays them.  ``conv`` overrides the
+    per-layer executor (the lax.conv oracle of `execute_oracle`)."""
+    lay0 = plan.layers[0].mapping.layer
+    if x.shape[1] != lay0.ic:
+        raise ValueError(f"{lay0.name}: input has {x.shape[1]} channels,"
+                         f" layer expects {lay0.ic}")
+    fused = not jitted and conv is None     # one program: fence hoisting
+    kernels = list(kernels)
+    for i, lp in enumerate(plan.layers):
+        lay = lp.mapping.layer
+        xp = fit_spatial(x, lay.i_h, lay.i_w)
+        y = conv(lp, xp, kernels[i]) if conv is not None else \
+            _layer_conv(lp, xp, kernels[i], mesh, jitted=jitted)
+        if activation is not None:
+            y = activation(y)
+        if lp.glue == "concat":
+            skip = center_crop(xp, y.shape[-2], y.shape[-1])
+            x = jnp.concatenate([skip, y], axis=1)
+        else:                       # "chain" / "last"
+            x = y
+        j = i + 1 + _LOOKAHEAD
+        if fused and j < len(plan.layers):
+            # bounded pipelining (module docstring): layers past the
+            # lookahead window cannot start until this carry exists
+            x, *rest = _fence((x, *kernels[j:]))
+            kernels[j:] = rest
+    return x
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("mesh", "activation"))
+def _execute_jit(plan, kernels, x, *, mesh=None, activation=None):
+    return _forward(plan, kernels, x, mesh, activation, jitted=False)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,),
+                   static_argnames=("mesh", "activation"))
+def _execute_jit_donated(plan, kernels, x, *, mesh=None, activation=None):
+    return _forward(plan, kernels, x, mesh, activation, jitted=False)
+
+
+def _check_call(plan: NetworkPlan, kernels, x, mesh) -> None:
+    if not plan.chained:
+        raise ValueError(
+            "execute_plan needs a chained plan; this one was compiled "
+            "with chained=False (per-layer dispatch via apply_layer)")
+    if len(kernels) != len(plan.layers):
+        raise ValueError(f"{len(kernels)} kernels for "
+                         f"{len(plan.layers)} planned layers")
+    axes = mesh_axes(mesh)
+    if axes != plan.mesh_axes:
+        raise ValueError(
+            f"mesh {axes} does not match the plan's compile mesh "
+            f"{plan.mesh_axes} — recompile the plan for this mesh")
+    if plan.batch is not None and x.shape[0] != plan.batch:
+        raise ValueError(
+            f"batch {x.shape[0]} != plan batch {plan.batch} — pad the "
+            f"request (launch/serve_cnn pad-and-mask) or recompile")
+    lay0 = plan.layers[0].mapping.layer
+    if x.shape[1] != lay0.ic:
+        raise ValueError(f"{lay0.name}: input has {x.shape[1]} channels,"
+                         f" layer expects {lay0.ic}")
+
+
+def execute_plan(plan: NetworkPlan, kernels: Sequence[jnp.ndarray],
+                 x: jnp.ndarray, *, mesh=None, activation=None,
+                 donate: bool = False) -> jnp.ndarray:
+    """Run the planned forward as one jitted program.
+
+    ``mesh`` must be the live mesh matching ``plan.mesh_axes`` (the Mesh
+    object stays out of the cached IR).  ``activation`` is a STATIC jit
+    argument hashed by identity — pass a stable callable
+    (``jax.nn.relu``, a module-level function), never a fresh
+    lambda/partial per call, or every call recompiles the whole fused
+    program.  ``donate=True`` donates the input batch buffer to the
+    program (streaming serving: the carry can reuse it); ignored on CPU
+    where XLA does not implement donation.
+    """
+    _check_call(plan, kernels, x, mesh)
+    fn = _execute_jit_donated if donate and jax.default_backend() != "cpu" \
+        else _execute_jit
+    return fn(plan, tuple(kernels), x, mesh=mesh, activation=activation)
+
+
+def execute_looped(plan: NetworkPlan, kernels: Sequence[jnp.ndarray],
+                   x: jnp.ndarray, *, mesh=None,
+                   activation=None) -> jnp.ndarray:
+    """The pre-plan dispatch shape — one jit launch per layer, eager glue
+    between — kept as the benchmark baseline `execute_plan` is measured
+    against (same numerics, `len(plan.layers)` host dispatches per
+    forward instead of one)."""
+    _check_call(plan, kernels, x, mesh)
+    return _forward(plan, tuple(kernels), x, mesh, activation, jitted=True)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("mesh",))
+def _execute_layerwise_jit(plan, kernels, xs, *, mesh=None):
+    return tuple(_layer_conv(lp, x, k, mesh, jitted=False)
+                 for lp, k, x in zip(plan.layers, kernels, xs))
+
+
+def execute_layerwise(plan: NetworkPlan, kernels: Sequence[jnp.ndarray],
+                      xs: Sequence[jnp.ndarray], *, mesh=None):
+    """Every layer on its OWN input, fused into one jitted program — the
+    plan counterpart of looping `apply_layer` over a stack that does not
+    chain (several bench networks are representative layer *sets*, not
+    chains).  One host dispatch instead of ``len(plan.layers)``."""
+    if len(kernels) != len(plan.layers) or len(xs) != len(plan.layers):
+        raise ValueError(f"{len(kernels)} kernels / {len(xs)} inputs for "
+                         f"{len(plan.layers)} planned layers")
+    return _execute_layerwise_jit(plan, tuple(kernels), tuple(xs),
+                                  mesh=mesh)
+
+
+def execute_oracle(plan: NetworkPlan, kernels: Sequence[jnp.ndarray],
+                   x: jnp.ndarray, *, activation=None) -> jnp.ndarray:
+    """`lax.conv_general_dilated` composed over the SAME compiled chain
+    — the DESIGN.md §5 oracle the plan executors are cross-checked
+    against (pruned channels must be zeroed in ``kernels``)."""
+    from repro.cnn.cim_conv import reference_conv2d
+    if not plan.chained:
+        raise ValueError("execute_oracle needs a chained plan")
+    return _forward(
+        plan, tuple(kernels), x, None, activation, jitted=True,
+        conv=lambda lp, xp, k: reference_conv2d(
+            lp.mapping.layer, xp, k, groups=lp.mapping.group))
+
+
+def apply_layer(plan: NetworkPlan, i: int, x: jnp.ndarray,
+                kernel: jnp.ndarray, *, mesh=None) -> jnp.ndarray:
+    """Execute layer ``i`` of the plan stand-alone (jit entry per
+    executor) — the `apply_cnn` path, where pooling / bias / activation
+    plumbing between convs belongs to the model, not the plan."""
+    return _layer_conv(plan.layers[i], x, kernel, mesh, jitted=True)

@@ -10,13 +10,11 @@ the same square-inclined rule as tetris_matmul.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _gmm_kernel(x_ref, w_ref, o_ref):

@@ -267,14 +267,16 @@ def _vmem_bytes_whole(b, ic_t, oc_t, layer) -> int:
                 + b * oc_t * layer.o_h * layer.o_w)
 
 
-def _sdk_conv_traced(mapping: LayerMapping, x: jnp.ndarray,
-                     kernel: jnp.ndarray, *, interpret: bool = False,
-                     block: str = "auto",
-                     vmem_budget: int = 8 * 1024 * 1024) -> jnp.ndarray:
+def sdk_conv_traced(mapping: LayerMapping, x: jnp.ndarray,
+                    kernel: jnp.ndarray, *, interpret: bool = False,
+                    block: str = "auto",
+                    vmem_budget: int = 8 * 1024 * 1024) -> jnp.ndarray:
     """Trace-time body of :func:`sdk_conv` — see it for the contract.
-    Builds one pallas_call per (group, tile); dispatch goes through
-    :func:`sdk_conv_jit` so the closures are built once per static
-    (mapping, shapes, flags) signature, not once per call."""
+    Public plan-consuming entry: `repro.exec.run` inlines it into the
+    whole-network program.  Builds one pallas_call per (group, tile);
+    stand-alone dispatch goes through :func:`sdk_conv_jit` so the
+    closures are built once per static (mapping, shapes, flags)
+    signature, not once per call."""
     _trace_counts[_trace_key(mapping, x, kernel, interpret=interpret,
                              block=block, vmem_budget=vmem_budget)] += 1
     layer = mapping.layer
@@ -364,7 +366,9 @@ def _sdk_conv_traced(mapping: LayerMapping, x: jnp.ndarray,
                     interpret=interpret,
                 )(xt, kt)
             acc = acc + res.sum(axis=0)[:, :oc_g]
-            c_base += kept
+            # the tile's pruned trailing channels are skipped, not
+            # shifted into the next tile's range
+            c_base += kept + tile.pruned_channels
         outs.append(acc)
     return jnp.concatenate(outs, axis=1).astype(
         jnp.result_type(x, kernel))
@@ -387,7 +391,7 @@ def _trace_key(mapping, x, kernel, **flags) -> Tuple:
 
 sdk_conv_jit = functools.partial(
     jax.jit, static_argnums=(0,),
-    static_argnames=("interpret", "block", "vmem_budget"))(_sdk_conv_traced)
+    static_argnames=("interpret", "block", "vmem_budget"))(sdk_conv_traced)
 sdk_conv_jit.__doc__ = (
     """jit entry mirroring ``cim_conv2d_jit``: mapping (frozen dataclass)
     and the tiling flags are static — the per-(group, tile) pallas_call

@@ -10,12 +10,11 @@ from functools import partial
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
-from .flash_attention import flash_attention, mha_flash
+from .flash_attention import flash_attention
 from .grouped_matmul import grouped_matmul
-from .im2win_conv import im2win_conv, select_window
-from .tetris_matmul import select_block_shape, tetris_matmul
+from .im2win_conv import im2win_conv
+from .tetris_matmul import tetris_matmul
 
 INTERPRET = jax.default_backend() == "cpu"
 

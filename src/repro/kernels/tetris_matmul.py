@@ -14,7 +14,6 @@ wants; the count matches the ceil form).
 from __future__ import annotations
 
 import functools
-import math
 from typing import Tuple
 
 import jax
@@ -94,13 +93,13 @@ def tetris_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
         bk -= 1
     gm, gn, gk = (pl.cdiv(m, bm), pl.cdiv(n, bn), k // bk)
 
-    def xi(i, j, l):
-        return (jnp.minimum(i, _last(m, bm)), l)
+    def xi(i, j, ki):
+        return (jnp.minimum(i, _last(m, bm)), ki)
 
-    def wi(i, j, l):
-        return (l, jnp.minimum(j, _last(n, bn)))
+    def wi(i, j, ki):
+        return (ki, jnp.minimum(j, _last(n, bn)))
 
-    def oi(i, j, l):
+    def oi(i, j, ki):
         return (jnp.minimum(i, _last(m, bm)), jnp.minimum(j, _last(n, bn)))
 
     return pl.pallas_call(

@@ -27,7 +27,7 @@ import jax
 from repro.configs import ARCH_IDS, canon, get_config
 from repro.launch import roofline as rl
 from repro.launch.hlo_analysis import analyze_hlo
-from repro.launch.mesh import make_production_mesh, mesh_tag
+from repro.launch.mesh import make_production_mesh
 from repro.launch.shapes import SHAPES, build_cell, cell_supported
 from repro.models import transformer as T
 

@@ -176,7 +176,6 @@ def _conv_flops(op: Op, dims_by_name: Dict[str, List[int]]) -> float:
     if len(ops) < 2 or ops[1] not in dims_by_name:
         return 0.0
     kernel_elems = math.prod(dims_by_name[ops[1]]) or 1
-    m = re.search(r"dim_labels=\S*?_([a-z0-9]+)->", op.rest)
     # flops ~ 2 * out_elems * (kernel elems / out_features)
     return 2.0 * op.out_elems * kernel_elems
 

@@ -10,6 +10,8 @@ state — the dry-run must set XLA_FLAGS before first jax init.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import numpy as np
 
@@ -73,18 +75,46 @@ def make_macro_mesh(sub_r: int, sub_c: int, devices=None, *,
 
 def make_serving_mesh(sub_r: int, sub_c: int, batch: int, devices=None):
     """Macro mesh for throughput serving: spend as many devices as the
-    (sub_r, sub_c) macro grid can absorb, then stack the *largest* "data"
-    axis that both divides the batch and fits the remaining device
-    budget.  Returns None when only one device is usable."""
+    (sub_r, sub_c) macro grid can absorb, then stack the largest "data"
+    axis the remaining device budget affords (clamped to ``batch`` — a
+    replica with no work is wasted).  The batch need not divide the data
+    axis: ragged request batches pad-and-mask to the next multiple
+    (:func:`pad_to_data_axis`, launch/serve_cnn.py) instead of silently
+    falling back to the single-device vmap path.  Returns None when only
+    one device is usable."""
     devices = list(jax.devices() if devices is None else devices)
     base = make_macro_mesh(sub_r, sub_c, devices)
     per_replica = int(np.prod(base.devices.shape)) if base is not None else 1
-    best = None
-    for d in range(len(devices) // per_replica, 0, -1):
-        if batch % d == 0:
-            best = make_macro_mesh(sub_r, sub_c, devices, data=d)
-            break
+    d = max(1, min(len(devices) // per_replica, batch))
+    best = make_macro_mesh(sub_r, sub_c, devices, data=d)
     return best if best is not None else base
+
+
+def serving_mesh_for(net_mapping, batch: int, devices=None):
+    """Largest mesh every layer of a ``NetworkMapping`` can shard onto:
+    the mesh macro axes must divide each layer's sub-grid (gcd across
+    layers), leftover devices stack along "data"."""
+    gr = gc = 0
+    for m in net_mapping.layers:
+        gr = math.gcd(gr, m.sub_grid.r)
+        gc = math.gcd(gc, m.sub_grid.c)
+    return make_serving_mesh(max(gr, 1), max(gc, 1), batch,
+                             devices=devices)
+
+
+def data_axis_size(mesh) -> int:
+    """Size of the mesh's "data" axis (1 when absent / no mesh)."""
+    if mesh is None or "data" not in mesh.axis_names:
+        return 1
+    return int(mesh.shape["data"])
+
+
+def pad_to_data_axis(batch: int, mesh) -> int:
+    """Smallest batch >= ``batch`` the mesh's "data" axis divides — the
+    plan batch a ragged request batch pads to (no-op without a data
+    axis)."""
+    d = data_axis_size(mesh)
+    return -(-batch // d) * d
 
 
 def mesh_tag(mesh) -> str:

@@ -1,28 +1,37 @@
-"""Batched CNN serving driver: mapped-executor throughput (images/s).
+"""Batched CNN serving driver: compiled-plan throughput (images/s).
 
 The CNN counterpart of ``launch/serve.py`` (which serves the transformer
-scaffold): map a benchmark conv stack once — reusing a persistent on-disk
-mapping cache so a cold replica skips the window search entirely — then
-drive steady-state batched forward passes through the macro-parallel
-executor (``cnn/mapped_net.py``, ``executor="mapped"``) and report
-images/s.  With multiple devices the batch shards over the "data" axis
-of the serving mesh while (row, col) carry the macro grid
-(``launch.mesh.make_serving_mesh``; DESIGN.md §7).
+scaffold): map a benchmark conv stack once — reusing a persistent
+on-disk mapping cache so a cold replica skips the window search entirely
+— compile the mapping into ONE :class:`repro.exec.NetworkPlan` (executor
+choice, schedule, glue, and mesh fitting all fixed at compile time;
+DESIGN.md §8), then drive steady-state batched forward passes through
+``execute_plan`` — a single jitted program per forward, never re-fitting
+the mesh per request — and report images/s.  With multiple devices the
+batch shards over the "data" axis of the serving mesh while (row, col)
+carry the macro grid (``launch.mesh.make_serving_mesh``; DESIGN.md §7).
+
+Ragged request batches are **padded and masked** to the plan's batch
+(the next multiple of the "data" axis, ``mesh.pad_to_data_axis``)
+instead of silently falling back to the single-device vmap path; the
+driver reports effective (request) next to padded images/s.
 
     python -m repro.launch.serve_cnn --net cnn8 --batch 8 --steps 20 \
         --p-max 4 --cache-dir /tmp/mapping-cache
 
 Prints one ``serve/...`` CSV row per the benchmark harness contract plus
-a human-readable summary (search time, cache stats, mesh, images/s).
+a human-readable summary (search time, cache stats, mesh, plan,
+images/s).
 """
 from __future__ import annotations
 
 import argparse
-import math
 import time
+from dataclasses import dataclass
 
 from repro.core import (ArrayConfig, MacroGrid, grid_search, map_net, memo,
                         networks)
+from repro.launch import mesh as meshlib
 
 
 def _parse_grid(text: str) -> MacroGrid:
@@ -51,24 +60,41 @@ def map_for_serving(net: str, array: ArrayConfig, algorithm: str,
 
 
 def serving_mesh_for(net_mapping, batch: int):
-    """Largest mesh every layer of the mapping can shard onto: the mesh
-    macro axes must divide each layer's sub-grid (gcd across layers),
-    leftover devices stack along "data" when the batch divides."""
-    from repro.launch.mesh import make_serving_mesh
-    gr = gc = 0
-    for m in net_mapping.layers:
-        gr = math.gcd(gr, m.sub_grid.r)
-        gc = math.gcd(gc, m.sub_grid.c)
-    return make_serving_mesh(max(gr, 1), max(gc, 1), batch)
+    """Largest mesh every layer of the mapping can shard onto — thin
+    wrapper over :func:`repro.launch.mesh.serving_mesh_for`."""
+    return meshlib.serving_mesh_for(net_mapping, batch)
+
+
+@dataclass
+class ServeStats:
+    """One steady-state measurement: effective rate counts the images
+    the caller asked for; padded counts what the plan executed."""
+
+    images_per_s: float         # request images / batch time (effective)
+    padded_images_per_s: float  # plan-batch images / batch time
+    s_per_batch: float
+    request_batch: int
+    plan_batch: int
+    plan: object                # the NetworkPlan served from
 
 
 def serve(net_mapping, batch: int, steps: int, warmup: int = 2,
-          mesh=None, seed: int = 0):
-    """Steady-state batched forward passes; returns (images/s, s/batch)."""
+          mesh=None, seed: int = 0, policy: str = "mapped") -> ServeStats:
+    """Steady-state batched forward passes through a compiled plan.
+
+    ``batch`` is the *request* batch; when it does not divide the mesh's
+    "data" axis the inputs are zero-padded to the plan batch and the
+    padded rows masked off the output (pad-and-mask) — the mesh is never
+    silently abandoned for the vmap path."""
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from repro.cnn.mapped_net import mapped_net_apply, zero_pruned_kernels
+    from repro.cnn.mapped_net import zero_pruned_kernels
+    from repro.exec import compile_plan, execute_plan
+
+    plan_batch = meshlib.pad_to_data_axis(batch, mesh)
+    plan = compile_plan(net_mapping, executor_policy=policy, mesh=mesh,
+                        batch=plan_batch)
 
     rng = np.random.RandomState(seed)
     ks = zero_pruned_kernels(net_mapping, [
@@ -78,10 +104,12 @@ def serve(net_mapping, batch: int, steps: int, warmup: int = 2,
     first = net_mapping.layers[0].layer
     x = jnp.asarray(rng.randn(batch, first.ic, first.i_h, first.i_w),
                     jnp.float32)
+    if plan_batch != batch:         # ragged: pad to the plan's batch ...
+        x = jnp.pad(x, ((0, plan_batch - batch),) + ((0, 0),) * 3)
 
     def step():
-        return jax.block_until_ready(
-            mapped_net_apply(net_mapping, ks, x, mesh=mesh))
+        y = execute_plan(plan, ks, x, mesh=mesh)
+        return jax.block_until_ready(y[:batch])   # ... mask padded rows
 
     for _ in range(max(1, warmup)):          # compile + steady the caches
         step()
@@ -89,7 +117,10 @@ def serve(net_mapping, batch: int, steps: int, warmup: int = 2,
     for _ in range(steps):
         step()
     dt = (time.perf_counter() - t0) / steps
-    return batch / dt, dt
+    return ServeStats(images_per_s=batch / dt,
+                      padded_images_per_s=plan_batch / dt,
+                      s_per_batch=dt, request_batch=batch,
+                      plan_batch=plan_batch, plan=plan)
 
 
 def main(argv=None) -> None:
@@ -102,19 +133,26 @@ def main(argv=None) -> None:
                     help="fixed macro grid RxC (default: 1x1)")
     ap.add_argument("--p-max", type=int, default=None,
                     help="Alg 2 macro-budget sweep instead of --grid")
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="request batch (padded-and-masked to the plan "
+                         "batch when the mesh data axis does not divide)")
     ap.add_argument("--steps", type=int, default=10)
     ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--policy", default="mapped",
+                    choices=("mapped", "reference", "sdk", "auto"),
+                    help="plan executor policy (per-layer for 'auto')")
     ap.add_argument("--cache-dir", default=None,
-                    help="persistent mapping cache directory "
+                    help="persistent mapping/plan cache directory "
                          "(default: $REPRO_MAPPING_CACHE)")
+    ap.add_argument("--cache-max-bytes", type=int, default=None,
+                    help="mtime-LRU size cap for --cache-dir")
     ap.add_argument("--no-mesh", action="store_true",
                     help="force the single-device vmap path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     if args.cache_dir is not None:
-        memo.set_disk_cache(args.cache_dir)
+        memo.set_disk_cache(args.cache_dir, max_bytes=args.cache_max_bytes)
 
     mapping, search_s = map_for_serving(
         args.net, ArrayConfig(args.ar, args.ac), args.alg,
@@ -126,14 +164,21 @@ def main(argv=None) -> None:
           f"disk_writes={st['disk_writes']})")
 
     mesh = None if args.no_mesh else serving_mesh_for(mapping, args.batch)
-    tag = ("x".join(str(s) for s in mesh.devices.shape)
-           if mesh is not None else "vmap")
-    ips, dt = serve(mapping, args.batch, args.steps, warmup=args.warmup,
-                    mesh=mesh, seed=args.seed)
-    print(f"mesh={tag} batch={args.batch}: {ips:.1f} images/s "
-          f"({dt*1e3:.1f} ms/batch, executor=mapped)")
-    print(f"serve/{args.net}/b{args.batch},{dt*1e6:.1f},"
-          f"images_per_s={ips:.1f};mesh={tag};"
+    tag = meshlib.mesh_tag(mesh) if mesh is not None else "vmap"
+    s = serve(mapping, args.batch, args.steps, warmup=args.warmup,
+              mesh=mesh, seed=args.seed, policy=args.policy)
+    print(s.plan.describe())
+    pad_note = (f" ({s.padded_images_per_s:.1f} padded images/s at "
+                f"plan batch {s.plan_batch})"
+                if s.plan_batch != s.request_batch else "")
+    print(f"mesh={tag} batch={args.batch}: {s.images_per_s:.1f} images/s"
+          f"{pad_note} ({s.s_per_batch*1e3:.1f} ms/batch, "
+          f"executor={args.policy})")
+    print(f"serve/{args.net}/b{args.batch},{s.s_per_batch*1e6:.1f},"
+          f"images_per_s={s.images_per_s:.1f};"
+          f"padded_images_per_s={s.padded_images_per_s:.1f};"
+          f"plan_batch={s.plan_batch};"
+          f"dispatches={s.plan.host_dispatches};mesh={tag};"
           f"search_ms={search_s*1e3:.1f};table_builds={st['table_misses']}")
 
 

@@ -19,10 +19,9 @@ same rules cover every arch.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, TYPE_CHECKING, Tuple
+from typing import Optional, TYPE_CHECKING, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .mesh import data_axes

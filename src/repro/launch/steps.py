@@ -9,8 +9,7 @@ serve_step: one decode token against the cache -> (next token, cache).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -78,11 +77,11 @@ def make_train_step(cfg: ArchConfig, tc: TrainConfig, act_sharding=None):
         mb_batch = {k: split_mb(v) for k, v in batch.items()}
 
         def one_mb(acc, mb):
-            l, g = jax.value_and_grad(loss_fn)(params, cfg, mb,
-                                               act_sharding)
+            lv, g = jax.value_and_grad(loss_fn)(params, cfg, mb,
+                                                act_sharding)
             acc = jax.tree.map(
                 lambda a, gg: a + gg.astype(jnp.float32) / n_mb, acc, g)
-            return acc, l
+            return acc, lv
 
         if n_mb == 1:
             loss, grads = jax.value_and_grad(loss_fn)(

@@ -24,10 +24,8 @@ from repro.checkpoint import CheckpointStore
 from repro.configs import get_config
 from repro.data import ShardedDataPipeline
 from repro.data.synthetic import TokenStream
-from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import (TrainConfig, init_train_state,
                                 make_train_step)
-from repro.models import transformer as T
 from repro.runtime import HeartbeatMonitor, TrainSupervisor
 
 

@@ -10,7 +10,7 @@ ffn:   'dense' (gated silu), 'gelu' (whisper), 'moe', 'none'
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 from .moe import MoEConfig

@@ -16,7 +16,6 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .common import cast
 
 C_FACTOR = 8.0
 

@@ -33,10 +33,10 @@ class SSMConfig:
 def segsum(a: jnp.ndarray) -> jnp.ndarray:
     """a (..., l) -> (..., l, l) with out[i,j] = sum a[j+1..i], -inf above
     the diagonal (decay matrix exponent)."""
-    l = a.shape[-1]
+    n = a.shape[-1]
     cs = jnp.cumsum(a, -1)
     out = cs[..., :, None] - cs[..., None, :]
-    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    mask = jnp.tril(jnp.ones((n, n), bool), 0)
     return jnp.where(mask, out, -jnp.inf)
 
 
@@ -55,8 +55,9 @@ def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
         # pad with dt=0 tokens: decay exp(0)=1 and contribution dt*x=0,
         # so padding is exact for both outputs and the final state
         pad = L - S % L
-        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)]
-                                 + [(0, 0)] * (a.ndim - 2))
+        def zpad(a):
+            return jnp.pad(a, [(0, 0), (0, pad)]
+                           + [(0, 0)] * (a.ndim - 2))
         x, dt, b, c = zpad(x), zpad(dt), zpad(b), zpad(c)
         S = S + pad
     nc = S // L

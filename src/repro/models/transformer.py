@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +25,7 @@ from .common import (apply_rotary, cast, dense_init, embed_init, keygen,
                      layer_norm, rms_norm, rotary_cos_sin, sinusoidal_at,
                      sinusoidal_positions)
 from .config import ArchConfig, BlockSpec, Stage
-from .moe import MoEConfig, moe_ffn
+from .moe import moe_ffn
 from .rglru import rg_lru, rg_lru_step
 from .ssm import causal_conv1d, ssd_chunked, ssd_decode_step
 
@@ -178,7 +178,7 @@ def init_params(cfg: ArchConfig, key: jax.Array) -> Dict:
 def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
     shapes = jax.eval_shape(partial(init_params, cfg),
                             jax.random.PRNGKey(0))
-    total = sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+    total = sum(math.prod(leaf.shape) for leaf in jax.tree.leaves(shapes))
     if active_only and cfg.moe is not None:
         m = cfg.moe
         n_moe = sum(st.n_units * sum(1 for sp in st.unit if sp.ffn == "moe")

@@ -20,7 +20,8 @@ class AdamWConfig:
 
 
 def adamw_init(params) -> Dict[str, Any]:
-    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros32(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {"m": jax.tree.map(zeros32, params),
             "v": jax.tree.map(zeros32, params),
             "step": jnp.zeros((), jnp.int32)}

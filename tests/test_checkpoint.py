@@ -51,7 +51,6 @@ def test_async_save(tmp_path):
 
 def test_elastic_resharding(tmp_path):
     """Restore onto a different mesh: leaves land with the new sharding."""
-    mesh1 = jax.make_mesh((1, 1), ("data", "model"))
     s = _state()
     save_checkpoint(tmp_path, 1, s)
     from jax.sharding import NamedSharding, PartitionSpec as P

@@ -94,3 +94,44 @@ def test_jit_entry_point_matches():
     ref = reference_conv2d(layer, x, k)
     np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
                                atol=1e-3, rtol=1e-3)
+
+
+def test_multi_tile_pruned_channels_zero_per_tile():
+    """Regression: pruned channels are the trailing slice of EACH tile's
+    nominal channel range.  With a pruned tile that is not last, the
+    executors must skip that tile's trailing channels in place (not
+    shift the next tile's range onto them), and zero_pruned_kernels must
+    zero exactly those per-tile slices — a single layer-trailing slice
+    of the summed prune counts zeroes the wrong channels."""
+    from repro.core.types import (LayerMapping, NetworkMapping,
+                                  TileMapping, Window)
+    from repro.cnn.mapped_net import mapped_conv2d, zero_pruned_kernels
+    from repro.kernels.im2win_conv import sdk_conv
+
+    layer = ConvLayerSpec("mt", 18, 18, 3, 3, 12, 8)
+    # window 6x6 -> 4x4 raster of 16 regular loads, no marginals
+    tiles = (
+        TileMapping(window=Window(6, 6), depth=5, ic_t=5, oc_t=8,
+                    ar_c=1, ac_c=1, n_regular=16, pruned_channels=1),
+        TileMapping(window=Window(6, 6), depth=6, ic_t=6, oc_t=8,
+                    ar_c=1, ac_c=1, n_regular=16, pruned_channels=0),
+    )
+    m = LayerMapping(layer=layer, array=ArrayConfig(512, 512),
+                     algorithm="synthetic", tiles=tiles)
+    x = jnp.asarray(RNG.randn(2, 12, 18, 18), jnp.float32)
+    k = jnp.asarray(RNG.randn(3, 3, 12, 8), jnp.float32)
+    net = NetworkMapping(name="mt", algorithm="synthetic",
+                         array=m.array, layers=(m,))
+    (kz,) = zero_pruned_kernels(net, [k])
+    # tile 0 covers channels [0, 6): keeps [0, 5), prunes {5}
+    assert float(jnp.abs(kz[:, :, 5]).sum()) == 0.0
+    assert float(jnp.abs(kz[:, :, 11]).sum()) > 0.0   # last ch is KEPT
+    ref = reference_conv2d(layer, x, kz)
+    for y in (cim_conv2d(m, x, k), mapped_conv2d(m, x, k),
+              sdk_conv(m, x, k, interpret=True)):
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   atol=1e-3, rtol=1e-3)
+    # the old convention (zero the layer-trailing sum) is NOT equivalent
+    k_old = k.at[:, :, 11:, :].set(0.0)
+    bad = reference_conv2d(layer, x, k_old)
+    assert float(jnp.max(jnp.abs(bad - ref))) > 1e-3

@@ -3,12 +3,10 @@ import math
 
 import pytest
 
-from repro.core import (ALGORITHMS, ArrayConfig, ConvLayerSpec, MacroGrid,
-                        Window, conv1d, grid_search, map_layer, map_net,
-                        networks)
+from repro.core import (ALGORITHMS, ArrayConfig, ConvLayerSpec, Window,
+                        conv1d, grid_search, map_layer, map_net, networks)
 from repro.core import cycles as cyc
-from repro.core.tetris import (depth_optimal_tile, factor_pairs_square_first,
-                               square_inclined)
+from repro.core.tetris import square_inclined
 
 ARR = ArrayConfig(512, 512)
 

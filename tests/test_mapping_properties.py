@@ -1,6 +1,5 @@
 """Hypothesis property tests: invariants of the mapping framework over
 random layers/arrays."""
-import math
 
 import pytest
 
@@ -8,8 +7,7 @@ pytest.importorskip("hypothesis", reason="property suite needs hypothesis "
                     "(optional test dependency, see pyproject.toml)")
 from hypothesis import assume, given, settings, strategies as st
 
-from repro.core import (ArrayConfig, ConvLayerSpec, MacroGrid, Window,
-                        map_layer)
+from repro.core import ArrayConfig, ConvLayerSpec, MacroGrid, map_layer
 from repro.core import cycles as cyc
 from repro.cnn.cim_conv import window_placements
 
@@ -20,7 +18,7 @@ layer_st = st.builds(
     k=st.sampled_from([1, 3, 5]),
     ic=st.integers(1, 48),
     oc=st.integers(1, 64),
-).filter(lambda l: l.i_w >= l.k_w)
+).filter(lambda sp: sp.i_w >= sp.k_w)
 
 array_st = st.builds(ArrayConfig,
                      ar=st.sampled_from([64, 128, 256, 512]),

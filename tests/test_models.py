@@ -6,8 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
-from repro.launch.steps import TrainConfig, init_train_state, loss_fn, \
-    make_train_step
+from repro.launch.steps import TrainConfig, init_train_state, make_train_step
 from repro.models import transformer as T
 from repro.models.ssm import SSMConfig, ssd_chunked, ssd_decode_step
 

@@ -1,0 +1,274 @@
+"""Compiled execution plans (repro/exec): IR contents, compile-time
+checks, fused-forward equivalence (bit-identical to the per-layer loop
+and to the mapped wrappers), mixed-executor dispatch, plan caching, and
+the forced-multi-device shard_map path."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ArrayConfig, MacroGrid, map_net, memo, networks
+from repro.cnn.mapped_net import (mapped_net_apply, reference_net_apply,
+                                  zero_pruned_kernels)
+from repro.exec import (EXECUTORS, compile_plan, execute_layerwise,
+                        execute_looped, execute_oracle, execute_plan)
+
+RNG = np.random.RandomState(7)
+
+
+def _net(name="cnn8", layers=None, grid=MacroGrid(2, 2), groups=(1, 2)):
+    layers = networks.NETWORKS[name]() if layers is None else layers
+    return map_net(name, layers, ArrayConfig(64, 64), "TetrisG-SDK",
+                   grid, groups=groups)
+
+
+def _data(net, batch=2):
+    ks = zero_pruned_kernels(net, [
+        jnp.asarray(RNG.randn(m.layer.k_h, m.layer.k_w,
+                              m.layer.ic // m.group, m.layer.oc) * 0.1,
+                    jnp.float32) for m in net.layers])
+    first = net.layers[0].layer
+    x = jnp.asarray(RNG.randn(batch, first.ic, first.i_h, first.i_w),
+                    jnp.float32)
+    return ks, x
+
+
+def test_compile_plan_ir_fields():
+    """The IR records executor, schedule (steps==cycles), glue, carry
+    channels, and sharding decisions — all fixed at compile time."""
+    net = _net()
+    plan = compile_plan(net, executor_policy="mapped")
+    assert plan.chained and plan.mesh_axes is None and plan.batch is None
+    assert plan.executors == ("mapped",) * len(net.layers)
+    assert plan.total_steps == net.total_cycles
+    assert plan.host_dispatches == 1
+    for lp, m in zip(plan.layers, net.layers):
+        assert lp.mapping is m
+        assert lp.schedule.steps == m.cycles     # compile-time contract
+        assert not lp.use_mesh                   # no mesh given
+        assert lp.carry_c == m.layer.ic
+    assert all(lp.glue == "chain" for lp in plan.layers[:-1])
+    assert plan.layers[-1].glue == "last"
+    assert "dispatches/forward=1" in plan.describe()
+
+
+def test_compile_plan_policies():
+    """Policy forms: single name, per-layer sequence, callable, auto."""
+    net = _net()
+    n = len(net.layers)
+    assert compile_plan(net, executor_policy="reference").executors == \
+        ("reference",) * n
+    seq = ["mapped", "reference"] + ["mapped"] * (n - 2)
+    assert compile_plan(net, executor_policy=seq).executors == tuple(seq)
+    by_ic = compile_plan(
+        net, executor_policy=lambda m: "mapped" if m.layer.ic > 32
+        else "reference")
+    assert set(by_ic.executors) == {"mapped", "reference"}
+    auto = compile_plan(net, executor_policy="auto")
+    assert all(e in EXECUTORS for e in auto.executors)
+    assert "sdk" not in auto.executors       # no TPU in CI
+    with pytest.raises(ValueError, match="unknown executor"):
+        compile_plan(net, executor_policy="warp")
+    with pytest.raises(ValueError, match="lists 2 executors"):
+        compile_plan(net, executor_policy=["mapped", "mapped"])
+
+
+def test_compile_plan_rejects_bad_chain():
+    """Chaining errors surface at compile time with the existing
+    message, not mid-forward."""
+    layers = networks.inception()        # representative set, no chain
+    net = _net("inception", layers)
+    with pytest.raises(ValueError, match="cannot chain"):
+        compile_plan(net, executor_policy="mapped")
+    plan = compile_plan(net, executor_policy="mapped", chained=False)
+    assert all(lp.glue == "layerwise" for lp in plan.layers)
+    ks, _ = _data(net)
+    with pytest.raises(ValueError, match="chained plan"):
+        execute_plan(plan, ks, jnp.zeros((1, 1, 1, 1)))
+
+
+def test_compile_plan_sdk_grid_guard():
+    """The sdk executor runs passes/groups sequentially: pinning it on a
+    mapping that owes a non-degenerate sub-grid must fail at compile."""
+    net = _net(grid=MacroGrid(2, 2), groups=(1,))
+    assert any(m.sub_grid.p > 1 for m in net.layers)
+    with pytest.raises(ValueError, match="cannot realize sub-grid"):
+        compile_plan(net, executor_policy="sdk")
+
+
+def test_execute_plan_matches_wrapper_and_loop_cnn8():
+    """Acceptance: the fused one-dispatch forward is bit-identical to
+    mapped_net_apply (itself the plan wrapper) and to the per-layer
+    dispatch loop; oracle agreement at the usual tolerance."""
+    net = _net()
+    ks, x = _data(net)
+    plan = compile_plan(net, executor_policy="mapped")
+    y_fused = execute_plan(plan, ks, x)
+    assert bool(jnp.all(y_fused == mapped_net_apply(net, ks, x)))
+    assert bool(jnp.all(y_fused == execute_looped(plan, ks, x)))
+    r = reference_net_apply(net, ks, x)
+    np.testing.assert_allclose(
+        np.asarray(y_fused), np.asarray(r), rtol=1e-4,
+        atol=1e-4 * float(jnp.max(jnp.abs(r))))
+
+
+def test_execute_plan_matches_wrapper_densenet_slice():
+    """Same bit-identity through DenseNet concat glue + marginal-window
+    layers, plus gradients: fused vs looped exact, vs oracle at
+    reassociation tolerance."""
+    net = _net("densenet40", networks.densenet40()[10:15],
+               grid=MacroGrid(4, 1))
+    ks, x = _data(net, batch=1)
+    plan = compile_plan(net, executor_policy="mapped")
+    assert any(lp.glue == "concat" for lp in plan.layers)
+    y_fused = execute_plan(plan, ks, x)
+    assert bool(jnp.all(y_fused == mapped_net_apply(net, ks, x)))
+    assert bool(jnp.all(y_fused == execute_looped(plan, ks, x)))
+
+    def loss(fn, k0):
+        return jnp.sum(fn(plan, [k0] + list(ks[1:]), x) ** 2)
+
+    gf = jax.grad(lambda k: loss(execute_plan, k))(ks[0])
+    gl = jax.grad(lambda k: loss(execute_looped, k))(ks[0])
+    assert bool(jnp.all(gf == gl))           # same program modulo fences
+    go = jax.grad(lambda k: loss(
+        lambda p, kk, xx: execute_oracle(p, kk, xx), k))(ks[0])
+    scale = float(jnp.max(jnp.abs(go)))
+    assert float(jnp.max(jnp.abs(gf - go))) < 1e-4 * scale
+
+
+def test_mixed_executor_dispatch():
+    """One plan, several executors: reference and mapped layers compose
+    in a single fused program and still match the oracle."""
+    net = _net()
+    n = len(net.layers)
+    seq = ["reference" if i % 2 else "mapped" for i in range(n)]
+    plan = compile_plan(net, executor_policy=seq)
+    ks, x = _data(net)
+    y = execute_plan(plan, ks, x)
+    r = reference_net_apply(net, ks, x)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(r), rtol=1e-4,
+        atol=1e-4 * float(jnp.max(jnp.abs(r))))
+
+
+def test_mixed_executor_with_sdk_interpret():
+    """An sdk (Pallas, interpret mode off-TPU) layer dispatches inside
+    the fused program next to the other executors."""
+    layers = [networks.cnn8()[0]]
+    net = _net("cnn8", layers, grid=MacroGrid(1, 1), groups=(1,))
+    plan = compile_plan(net, executor_policy="sdk")
+    assert plan.layers[0].interpret          # off-TPU default
+    ks, x = _data(net, batch=1)
+    y = execute_plan(plan, ks, x)
+    r = reference_net_apply(net, ks, x)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(r), rtol=1e-3,
+        atol=1e-3 * float(jnp.max(jnp.abs(r))))
+
+
+def test_execute_layerwise_matches_loop():
+    """Layer-set plans: the fused layerwise program equals per-layer
+    dispatch on every layer's own input."""
+    from repro.exec import apply_layer
+    net = _net("inception", networks.inception())
+    plan = compile_plan(net, executor_policy="mapped", chained=False)
+    ks, _ = _data(net)
+    xs = [jnp.asarray(RNG.randn(1, m.layer.ic, m.layer.i_h, m.layer.i_w),
+                      jnp.float32) for m in net.layers]
+    fused = execute_layerwise(plan, ks, xs)
+    for i, y in enumerate(fused):
+        assert bool(jnp.all(y == apply_layer(plan, i, xs[i], ks[i])))
+
+
+def test_plan_memoized():
+    """compile_plan joins the memo result cache: the second identical
+    compile is a hit, a different policy/batch is a fresh key."""
+    memo.clear()
+    net = _net()
+    p1 = compile_plan(net, executor_policy="mapped")
+    misses = memo.stats["result_misses"]
+    p2 = compile_plan(net, executor_policy="mapped")
+    assert p2 is p1
+    assert memo.stats["result_misses"] == misses
+    assert memo.stats["result_hits"] >= 1
+    compile_plan(net, executor_policy="reference")
+    assert memo.stats["result_misses"] == misses + 1
+
+
+def test_execute_plan_call_checks():
+    net = _net()
+    ks, x = _data(net)
+    plan = compile_plan(net, executor_policy="mapped")
+    with pytest.raises(ValueError, match="kernels for"):
+        execute_plan(plan, ks[:-1], x)
+    with pytest.raises(ValueError, match="channels"):
+        execute_plan(plan, ks, x[:, :5])
+    batched = compile_plan(net, executor_policy="mapped", batch=4)
+    with pytest.raises(ValueError, match="plan batch"):
+        execute_plan(batched, ks, x)         # x has batch 2
+
+
+def test_compile_plan_refuses_ragged_data_batch():
+    """A batch that does not divide the mesh's data axis must fail
+    loudly at compile (pad first), never silently degrade the whole
+    forward to the vmap path."""
+    class _FakeMesh:
+        axis_names = ("data", "row", "col")
+        shape = {"data": 2, "row": 2, "col": 2}
+    with pytest.raises(ValueError, match="data axis"):
+        compile_plan(_net(), executor_policy="mapped", mesh=_FakeMesh(),
+                     batch=3)
+
+
+def test_plan_shard_map_bit_identical():
+    """Tentpole contract on a forced (data=2, row=2, col=2) mesh: the
+    fused plan forward is bit-identical to the per-layer loop AND to the
+    single-device vmap plan, with use_mesh resolved at compile time."""
+    code = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import ArrayConfig, MacroGrid, map_net, networks
+from repro.cnn.mapped_net import zero_pruned_kernels
+from repro.exec import compile_plan, execute_looped, execute_plan
+from repro.launch.mesh import make_serving_mesh
+assert len(jax.devices()) == 8
+net = map_net("cnn8", networks.cnn8()[:3], ArrayConfig(64, 64),
+              "Tetris-SDK", MacroGrid(2, 2))
+mesh = make_serving_mesh(2, 2, 4)
+assert dict(mesh.shape) == {"data": 2, "row": 2, "col": 2}
+plan = compile_plan(net, executor_policy="mapped", mesh=mesh, batch=4)
+assert all(lp.use_mesh for lp in plan.layers)
+assert plan.mesh_axes == (("data", 2), ("row", 2), ("col", 2))
+rng = np.random.RandomState(0)
+ks = zero_pruned_kernels(net, [
+    jnp.asarray(rng.randn(m.layer.k_h, m.layer.k_w,
+                          m.layer.ic // m.group, m.layer.oc) * 0.2,
+                jnp.float32) for m in net.layers])
+first = net.layers[0].layer
+x = jnp.asarray(rng.randn(4, first.ic, first.i_h, first.i_w), jnp.float32)
+y_fused = execute_plan(plan, ks, x, mesh=mesh)
+y_loop = execute_looped(plan, ks, x, mesh=mesh)
+vmap_plan = compile_plan(net, executor_policy="mapped")
+y_vmap = execute_plan(vmap_plan, ks, x)
+assert bool(jnp.all(y_fused == y_loop)), "fused != loop on mesh"
+assert bool(jnp.all(y_fused == y_vmap)), "sharded != vmap"
+try:
+    execute_plan(plan, ks, x)                 # mesh omitted: must refuse
+except ValueError as e:
+    assert "compile mesh" in str(e)
+else:
+    raise AssertionError("mesh mismatch not caught")
+print("PLAN-SHARDED-OK")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src")]
+                   + sys.path))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "PLAN-SHARDED-OK" in out.stdout, out.stderr[-2000:]

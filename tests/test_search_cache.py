@@ -119,11 +119,11 @@ def test_lru_eviction_bound(cache_limits):
     layers = [ConvLayerSpec(f"l{i}", 12 + i, 12 + i, 3, 3, 8, 8)
               for i in range(8)]
     arr = ArrayConfig(256, 256)
-    first = [tetris.tetris_layer(l, arr, MacroGrid(2, 2)) for l in layers]
+    first = [tetris.tetris_layer(ly, arr, MacroGrid(2, 2)) for ly in layers]
     assert len(memo._results) <= 4 and len(memo._tables) <= 2
     assert memo.stats["result_evictions"] >= 4
     assert memo.stats["table_evictions"] >= 6
-    again = [tetris.tetris_layer(l, arr, MacroGrid(2, 2)) for l in layers]
+    again = [tetris.tetris_layer(ly, arr, MacroGrid(2, 2)) for ly in layers]
     assert first == again
     # shrinking below the live population evicts immediately
     memo.set_cache_limits(results=1)
@@ -202,3 +202,80 @@ def test_paper_numbers_survive_memoization():
     assert m.total_cycles == 116
     m2 = map_layer(networks.cnn8()[1], ArrayConfig(512, 512), "Tetris-SDK")
     assert m2.cycles == 38                          # CNN8-3, Fig 12
+
+
+def test_disk_cache_eviction_converges(tmp_path):
+    """A size-capped disk cache prunes oldest-mtime entries on insert
+    (counted in stats) instead of growing forever; the entry just
+    written always survives."""
+    memo.clear()
+    payload = b"x" * 256
+    try:
+        memo.set_disk_cache(tmp_path, max_bytes=4096)
+        for i in range(40):                 # ~10x the cap, distinct keys
+            memo.cached_result(("evict", i), lambda: payload,
+                               persist=True)
+        total = sum(f.stat().st_size
+                    for f in tmp_path.glob("*.mapping.pkl"))
+        assert 0 < total <= 4096            # converged, not grown
+        assert memo.stats["disk_evictions"] > 0
+        # the newest insert is still present on disk
+        memo.clear()
+        assert memo.cached_result(("evict", 39), lambda: None,
+                                  persist=True) == payload
+        # untouched early keys were evicted (recompute happens)
+        memo.clear()
+        assert memo.cached_result(("evict", 0), lambda: "gone",
+                                  persist=True) == "gone"
+    finally:
+        memo.set_disk_cache(None)
+        memo.clear()
+
+
+def test_disk_cache_eviction_is_mtime_lru(tmp_path):
+    """Hits refresh an entry's mtime, so a recently-read old entry
+    outlives a colder, newer one when the cap bites.  Entry ages are
+    pinned with explicit os.utime so the ordering never depends on the
+    filesystem's mtime granularity."""
+    import time
+    memo.clear()
+    entry = b"z" * 128                      # ~150 B pickled
+    try:
+        memo.set_disk_cache(tmp_path, max_bytes=420)
+        memo.cached_result(("lru", "a"), lambda: entry, persist=True)
+        memo.cached_result(("lru", "b"), lambda: entry, persist=True)
+        a_path = memo._disk_path(("lru", "a"))
+        b_path = memo._disk_path(("lru", "b"))
+        now = time.time()
+        os.utime(a_path, (now - 200, now - 200))   # a is the older entry
+        os.utime(b_path, (now - 100, now - 100))
+        memo.clear()                        # force the next read to disk
+        assert memo.cached_result(("lru", "a"), lambda: None,
+                                  persist=True) == entry
+        # the hit refreshed a's mtime past b's: b is now the LRU victim
+        assert a_path.stat().st_mtime > b_path.stat().st_mtime
+        memo.cached_result(("lru", "c"), lambda: entry, persist=True)
+        memo.clear()
+        assert memo.cached_result(("lru", "a"), lambda: "gone",
+                                  persist=True) == entry
+        memo.clear()
+        assert memo.cached_result(("lru", "b"), lambda: "gone",
+                                  persist=True) == "gone"
+    finally:
+        memo.set_disk_cache(None)
+        memo.clear()
+
+
+def test_disk_cache_uncapped_by_default(tmp_path):
+    memo.clear()
+    try:
+        memo.set_disk_cache(tmp_path)
+        assert memo.disk_cache_max_bytes() is None
+        for i in range(8):
+            memo.cached_result(("nocap", i), lambda: b"y" * 512,
+                               persist=True)
+        assert len(list(tmp_path.glob("*.mapping.pkl"))) == 8
+        assert memo.stats["disk_evictions"] == 0
+    finally:
+        memo.set_disk_cache(None)
+        memo.clear()

@@ -39,3 +39,82 @@ def test_serving_mesh_for_single_device():
                                      "Tetris-SDK", grid=MacroGrid(2, 2))
     if len(jax.devices()) == 1:
         assert serve_cnn.serving_mesh_for(m, batch=4) is None
+
+
+def test_serve_returns_effective_and_padded_rates():
+    """Without a data mesh the request batch needs no padding: plan
+    batch == request batch and both rates agree."""
+    m, _ = serve_cnn.map_for_serving("cnn8", ArrayConfig(512, 512),
+                                     "Tetris-SDK", grid=MacroGrid(1, 1))
+    s = serve_cnn.serve(m, batch=2, steps=1, warmup=1, mesh=None)
+    assert s.plan_batch == s.request_batch == 2
+    assert s.images_per_s == s.padded_images_per_s > 0
+    assert s.plan.host_dispatches == 1       # one fused program per step
+
+
+def test_pad_to_data_axis():
+    from repro.launch.mesh import data_axis_size, pad_to_data_axis
+
+    class _FakeMesh:
+        def __init__(self, **shape):
+            self.axis_names = tuple(shape)
+            self.shape = dict(shape)
+
+    assert pad_to_data_axis(3, None) == 3
+    plain = _FakeMesh(row=2, col=2)
+    assert data_axis_size(plain) == 1 and pad_to_data_axis(3, plain) == 3
+    data = _FakeMesh(data=2, row=2, col=2)
+    assert data_axis_size(data) == 2
+    assert pad_to_data_axis(3, data) == 4
+    assert pad_to_data_axis(4, data) == 4
+    assert pad_to_data_axis(1, data) == 2
+
+
+def test_serve_ragged_batch_pads_and_masks():
+    """Tentpole/satellite contract on 8 forced host devices: a request
+    batch of 3 does NOT divide the serving mesh's data axis (2) — the
+    driver pads to the plan batch (4), serves through the mesh, masks
+    the padded row, and the 3 real outputs are bit-identical to the
+    single-device vmap plan."""
+    import os
+    import subprocess
+    import sys
+    code = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import ArrayConfig, MacroGrid, map_net, networks
+from repro.cnn.mapped_net import zero_pruned_kernels
+from repro.exec import compile_plan, execute_plan
+from repro.launch import serve_cnn
+from repro.launch.mesh import pad_to_data_axis, serving_mesh_for
+assert len(jax.devices()) == 8
+net = map_net("cnn8", networks.cnn8()[:3], ArrayConfig(64, 64),
+              "Tetris-SDK", MacroGrid(2, 2))
+mesh = serving_mesh_for(net, 3)
+assert dict(mesh.shape) == {"data": 2, "row": 2, "col": 2}, dict(mesh.shape)
+assert pad_to_data_axis(3, mesh) == 4
+s = serve_cnn.serve(net, batch=3, steps=1, warmup=1, mesh=mesh)
+assert s.request_batch == 3 and s.plan_batch == 4
+assert abs(s.padded_images_per_s / s.images_per_s - 4 / 3) < 1e-6
+# masked outputs == vmap plan on the same 3 images
+rng = np.random.RandomState(0)
+ks = zero_pruned_kernels(net, [
+    jnp.asarray(rng.randn(m.layer.k_h, m.layer.k_w,
+                          m.layer.ic // m.group, m.layer.oc) * 0.2,
+                jnp.float32) for m in net.layers])
+first = net.layers[0].layer
+x3 = jnp.asarray(rng.randn(3, first.ic, first.i_h, first.i_w), jnp.float32)
+x4 = jnp.pad(x3, ((0, 1), (0, 0), (0, 0), (0, 0)))
+plan = compile_plan(net, executor_policy="mapped", mesh=mesh, batch=4)
+y = execute_plan(plan, ks, x4, mesh=mesh)[:3]
+y_ref = execute_plan(compile_plan(net, executor_policy="mapped"), ks, x3)
+assert bool(jnp.all(y == y_ref)), "masked sharded outputs != vmap"
+print("RAGGED-OK")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src")]
+                   + sys.path))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "RAGGED-OK" in out.stdout, out.stderr[-2000:]

@@ -5,8 +5,8 @@ import pytest
 
 from repro.core import (ArrayConfig, ConvLayerSpec, MacroGrid, grid_search,
                         map_layer, map_net, networks)
-from repro.core.simulator import (TechConfig, chip_area, macro_area,
-                                  simulate, simulate_layer)
+from repro.core.simulator import (TechConfig, chip_area, simulate,
+                                  simulate_layer)
 
 ARR = ArrayConfig(512, 512)
 
@@ -59,9 +59,9 @@ def test_power_gating_fig20():
 
 def test_energy_breakdown_positive():
     m = _sim("cnn8", "Tetris-SDK")
-    for l in m.layers:
+    for ly in m.layers:
         for k in ("array", "adc", "accum", "buffer", "interconnect"):
-            assert l.breakdown[k] > 0
+            assert ly.breakdown[k] > 0
 
 
 def test_simulate_layer_grouped_scaling():
