@@ -1,0 +1,87 @@
+"""Fixed-batch vs dynamic-batching serving on the SAME ragged stream.
+
+The ISSUE 5 acceptance row: arrival-driven coalescing must achieve at
+least the fixed-batch driver's *effective* images/s on cnn8.  Both
+drivers face an identical backlogged sequence of ragged requests
+(1..BATCH rows each):
+
+* ``fixed``   — the pre-dynamic serve_cnn behavior: every ragged request
+  is padded-and-masked to the one fixed plan batch and served ALONE, so
+  the plan executes ``BATCH`` rows to deliver ``rows`` useful ones;
+* ``dynamic`` — `serve_cnn.serve_dynamic`: the max-delay coalescer
+  drains the backlog into full ladder tiers, so padding collapses and
+  the effective rate approaches the padded rate.
+
+Rounds are interleaved (plan_bench-style) so CI machine noise hits both
+paths equally; medians are reported.  The same compiled plan backs the
+fixed path and the dynamic top tier — the comparison isolates the
+batching policy, not the executor.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import ArrayConfig, MacroGrid, map_net, networks
+from repro.exec import compile_plan, execute_plan
+from repro.launch import serve_cnn
+
+from .common import Row
+
+BATCH = 4                          # fixed plan batch == top ladder tier
+SIZES = (1, 3, 2, 1, 4, 2, 3, 1)   # ragged request rows (backlogged)
+ROUNDS = 5
+
+
+def _median(xs):
+    return sorted(xs)[len(xs) // 2]
+
+
+def run(full: bool = False):
+    layers = networks.cnn8() if full else networks.cnn8()[:4]
+    net = map_net("cnn8", layers, ArrayConfig(64, 64), "TetrisG-SDK",
+                  MacroGrid(2, 2), groups=(1, 2))
+    plan = compile_plan(net, executor_policy="mapped", batch=BATCH)
+    rng, ks = serve_cnn._serving_kernels(net, 0)
+    first = net.layers[0].layer
+    shape = (first.ic, first.i_h, first.i_w)
+    pool = rng.randn(BATCH, *shape).astype(np.float32)
+    reqs = tuple((0.0, r) for r in SIZES)
+
+    def fixed_round():
+        t0 = time.perf_counter()
+        for _, rows in reqs:        # one padded-and-masked plan forward
+            x = np.zeros((BATCH,) + shape, np.float32)   # per request
+            x[:rows] = pool[:rows]
+            y = execute_plan(plan, ks, jax.device_put(x))
+            jax.block_until_ready(y[:rows])
+        dt = time.perf_counter() - t0
+        return sum(SIZES) / dt, len(reqs) * BATCH / dt
+
+    def dynamic_round():
+        s = serve_cnn.serve_dynamic(net, reqs, max_batch=BATCH,
+                                    max_delay_ms=1.0, warmup=1)
+        return s.images_per_s, s.padded_images_per_s
+
+    fixed_round()                   # compile + warm both paths
+    dynamic_round()
+    eff = ([], [])
+    pad = ([], [])
+    for _ in range(ROUNDS):         # interleaved: noise hits both equally
+        for i, rnd in enumerate((fixed_round, dynamic_round)):
+            e, p = rnd()
+            eff[i].append(e)
+            pad[i].append(p)
+    f_eff, d_eff = _median(eff[0]), _median(eff[1])
+    f_pad, d_pad = _median(pad[0]), _median(pad[1])
+    return [
+        Row("serve_dyn/cnn8/fixed-ragged", 1e6 / f_eff,
+            f"images_per_s={f_eff:.1f};padded_images_per_s={f_pad:.1f};"
+            f"batch={BATCH};requests={len(SIZES)}"),
+        Row("serve_dyn/cnn8/dynamic", 1e6 / d_eff,
+            f"images_per_s={d_eff:.1f};padded_images_per_s={d_pad:.1f};"
+            f"speedup={d_eff / f_eff:.2f};max_batch={BATCH};"
+            f"max_delay_ms=1.0"),
+    ]

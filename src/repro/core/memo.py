@@ -105,6 +105,15 @@ def enabled() -> bool:
     return _enabled
 
 
+def snapshot() -> dict:
+    """Point-in-time copy of :data:`stats`.  Measurement code must read
+    counters from a snapshot taken at its phase boundary, never from the
+    live dict — later cache traffic (e.g. plan compiles during serving)
+    otherwise leaks into an earlier phase's report (the serve_cnn
+    search-stats bug, tests/test_serve_cnn.py)."""
+    return dict(stats)
+
+
 def set_cache_limits(results: Optional[int] = None,
                      tables: Optional[int] = None) -> None:
     """Re-bound the in-memory LRU caches (entries, not bytes).  Shrinking

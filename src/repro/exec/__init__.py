@@ -13,13 +13,13 @@ DESIGN.md §8 and the module docstrings of exec/plan.py / exec/run.py.
 """
 from .glue import GLUE_KINDS, center_crop, fit_spatial, resolve_chain
 from .plan import (EXECUTORS, LayerPlan, NetworkPlan, PolicyLike,
-                   compile_plan)
-from .run import (apply_layer, execute_layerwise, execute_looped,
-                  execute_oracle, execute_plan)
+                   compile_counts, compile_plan)
+from .run import (apply_layer, donation_supported, execute_layerwise,
+                  execute_looped, execute_oracle, execute_plan)
 
 __all__ = [
     "GLUE_KINDS", "EXECUTORS", "LayerPlan", "NetworkPlan", "PolicyLike",
-    "apply_layer", "center_crop", "compile_plan", "execute_layerwise",
-    "execute_looped", "execute_oracle", "execute_plan", "fit_spatial",
-    "resolve_chain",
+    "apply_layer", "center_crop", "compile_counts", "compile_plan",
+    "donation_supported", "execute_layerwise", "execute_looped",
+    "execute_oracle", "execute_plan", "fit_spatial", "resolve_chain",
 ]

@@ -244,6 +244,47 @@ def compile_plan(net: NetworkMapping, *,
                             backend=jax.default_backend())
     key = (net, execs, mesh_axes(mesh), batch, chained, interpret, block,
            vmem_budget)
-    return memo.cached_plan(
-        key, lambda: _compile(net, execs, mesh, batch, chained,
-                              interpret, block, vmem_budget))
+
+    def _compile_counted():
+        _note_compile(key)
+        return _compile(net, execs, mesh, batch, chained, interpret,
+                        block, vmem_budget)
+
+    return memo.cached_plan(key, _compile_counted)
+
+
+#: Actual `_compile` lowerings per cache key — cache hits (in-memory or
+#: disk) do NOT count.  The serving acceptance tests assert every tier
+#: of a plan ladder compiles exactly once per process
+#: (tests/test_serve_cnn.py); bounded like im2win_conv._trace_counts so
+#: a long-lived process cannot grow it without limit.
+_compile_counts: dict = {}
+_COMPILE_COUNT_LIMIT = 512
+
+
+def _note_compile(key) -> None:
+    if key not in _compile_counts:
+        while len(_compile_counts) >= _COMPILE_COUNT_LIMIT:
+            del _compile_counts[next(iter(_compile_counts))]
+        _compile_counts[key] = 0
+    _compile_counts[key] += 1
+
+
+def compile_counts(*, net: Optional[NetworkMapping] = None,
+                   batch: Optional[int] = None) -> dict:
+    """Copy of the per-key compile counters, optionally filtered to one
+    network mapping and/or plan batch — ``compile_counts(net=nm)``
+    values of all 1 prove each (policy, mesh, batch) lowered once."""
+    out = {}
+    for key, n in _compile_counts.items():
+        if net is not None and key[0] != net:
+            continue
+        if batch is not None and key[3] != batch:
+            continue
+        out[key] = n
+    return out
+
+
+# a cleared memo cache recompiles, so the counters reset with it —
+# "each tier compiled once" stays meaningful per cache generation
+memo.register_cache_clear(_compile_counts.clear)

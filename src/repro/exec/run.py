@@ -126,6 +126,20 @@ def _execute_jit_donated(plan, kernels, x, *, mesh=None, activation=None):
     return _forward(plan, kernels, x, mesh, activation, jitted=False)
 
 
+def donation_supported(mesh=None) -> bool:
+    """Whether XLA implements input-buffer donation where the plan will
+    actually run.  With a mesh bound, that is the mesh's device platform
+    — which may differ from ``jax.default_backend()`` (forced host
+    meshes, a CPU mesh next to an accelerator) — else the default
+    backend.  CPU (and mixed-platform meshes) never donate; callers fall
+    back cleanly to the non-donating entry."""
+    from repro.launch.mesh import mesh_platform
+    platform = mesh_platform(mesh)
+    if platform is None:
+        platform = jax.default_backend()
+    return platform not in ("cpu", "mixed")
+
+
 def _check_call(plan: NetworkPlan, kernels, x, mesh) -> None:
     if not plan.chained:
         raise ValueError(
@@ -160,11 +174,14 @@ def execute_plan(plan: NetworkPlan, kernels: Sequence[jnp.ndarray],
     (``jax.nn.relu``, a module-level function), never a fresh
     lambda/partial per call, or every call recompiles the whole fused
     program.  ``donate=True`` donates the input batch buffer to the
-    program (streaming serving: the carry can reuse it); ignored on CPU
-    where XLA does not implement donation.
+    program (streaming serving: the carry can reuse it, and the caller
+    must hand a FRESH buffer to every call — `launch.batching.InputRing`);
+    ignored when the platform the plan actually runs on — the mesh's
+    devices when a mesh is bound, else the default backend
+    (`donation_supported`) — does not implement donation (CPU).
     """
     _check_call(plan, kernels, x, mesh)
-    fn = _execute_jit_donated if donate and jax.default_backend() != "cpu" \
+    fn = _execute_jit_donated if donate and donation_supported(mesh) \
         else _execute_jit
     return fn(plan, tuple(kernels), x, mesh=mesh, activation=activation)
 

@@ -10,6 +10,7 @@ state — the dry-run must set XLA_FLAGS before first jax init.
 """
 from __future__ import annotations
 
+import functools
 import math
 
 import jax
@@ -115,6 +116,40 @@ def pad_to_data_axis(batch: int, mesh) -> int:
     axis)."""
     d = data_axis_size(mesh)
     return -(-batch // d) * d
+
+
+def _scan_mesh_platform(mesh) -> str | None:
+    devices = getattr(mesh, "devices", None)
+    if devices is None:
+        return None
+    plats = {p for p in (getattr(d, "platform", None)
+                         for d in np.asarray(devices).ravel())
+             if p is not None}
+    if not plats:
+        return None
+    return plats.pop() if len(plats) == 1 else "mixed"
+
+
+_mesh_platform_cached = functools.lru_cache(maxsize=64)(_scan_mesh_platform)
+
+
+def mesh_platform(mesh) -> str | None:
+    """Platform ("cpu" / "tpu" / "gpu") the mesh's devices live on, or
+    None without a mesh / without real devices.  The serving mesh may
+    sit on a different platform than ``jax.default_backend()`` (forced
+    host meshes in tests, CPU meshes next to an accelerator), so
+    platform-dependent decisions — input-buffer donation above all —
+    must key on the mesh, not the default backend.  Mixed-platform
+    meshes report ``"mixed"`` (callers treat that as unsupported).
+    Cached per mesh: `execute_plan(donate=...)` consults this on every
+    steady-state forward, and the O(devices) scan must not recur per
+    step on a production-size mesh."""
+    if mesh is None:
+        return None
+    try:
+        return _mesh_platform_cached(mesh)
+    except TypeError:               # unhashable mesh stand-ins (tests)
+        return _scan_mesh_platform(mesh)
 
 
 def mesh_tag(mesh) -> str:

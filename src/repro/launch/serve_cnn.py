@@ -3,34 +3,49 @@
 The CNN counterpart of ``launch/serve.py`` (which serves the transformer
 scaffold): map a benchmark conv stack once — reusing a persistent
 on-disk mapping cache so a cold replica skips the window search entirely
-— compile the mapping into ONE :class:`repro.exec.NetworkPlan` (executor
-choice, schedule, glue, and mesh fitting all fixed at compile time;
-DESIGN.md §8), then drive steady-state batched forward passes through
+— compile the mapping into :class:`repro.exec.NetworkPlan` programs
+(executor choice, schedule, glue, and mesh fitting all fixed at compile
+time; DESIGN.md §8), then drive steady-state forward passes through
 ``execute_plan`` — a single jitted program per forward, never re-fitting
 the mesh per request — and report images/s.  With multiple devices the
 batch shards over the "data" axis of the serving mesh while (row, col)
 carry the macro grid (``launch.mesh.make_serving_mesh``; DESIGN.md §7).
 
-Ragged request batches are **padded and masked** to the plan's batch
-(the next multiple of the "data" axis, ``mesh.pad_to_data_axis``)
-instead of silently falling back to the single-device vmap path; the
-driver reports effective (request) next to padded images/s.
+Two serving modes:
+
+* **fixed** (:func:`serve`) — every step serves one fixed request
+  batch; ragged request batches are padded-and-masked to the plan batch
+  (``mesh.pad_to_data_axis``) instead of silently falling back to the
+  single-device vmap path.
+* **dynamic** (:func:`serve_dynamic`, ``--max-delay-ms``) — an
+  arrival-driven queue + max-delay coalescer (`launch/batching.py`)
+  drains ragged arrivals into the largest ready batch, which pads to
+  the nearest tier of a power-of-two **plan ladder** (all tiers sharing
+  one serving mesh); per-tier effective vs padded images/s and
+  queue-delay percentiles are reported.  On platforms that implement
+  buffer donation the steady-state loop donates each batch's input
+  buffer to the program (``execute_plan(donate=True)``).
 
     python -m repro.launch.serve_cnn --net cnn8 --batch 8 --steps 20 \
         --p-max 4 --cache-dir /tmp/mapping-cache
+    python -m repro.launch.serve_cnn --net cnn8 --max-batch 8 \
+        --max-delay-ms 2 --arrival-rate 500 --requests 64
 
-Prints one ``serve/...`` CSV row per the benchmark harness contract plus
-a human-readable summary (search time, cache stats, mesh, plan,
-images/s).
+Prints ``serve/...`` (and per-tier ``serve_dyn/...``) CSV rows per the
+benchmark harness contract plus a human-readable summary (search time,
+cache stats, mesh, plan, images/s).
 """
 from __future__ import annotations
 
 import argparse
 import time
+from collections import deque
 from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
 
 from repro.core import (ArrayConfig, MacroGrid, grid_search, map_net, memo,
                         networks)
+from repro.launch import batching
 from repro.launch import mesh as meshlib
 
 
@@ -65,6 +80,18 @@ def serving_mesh_for(net_mapping, batch: int):
     return meshlib.serving_mesh_for(net_mapping, batch)
 
 
+def _serving_kernels(net_mapping, seed: int):
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.cnn.mapped_net import zero_pruned_kernels
+    rng = np.random.RandomState(seed)
+    ks = zero_pruned_kernels(net_mapping, [
+        jnp.asarray(rng.randn(m.layer.k_h, m.layer.k_w,
+                              m.layer.ic // m.group, m.layer.oc) * 0.1,
+                    jnp.float32) for m in net_mapping.layers])
+    return rng, ks
+
+
 @dataclass
 class ServeStats:
     """One steady-state measurement: effective rate counts the images
@@ -76,42 +103,52 @@ class ServeStats:
     request_batch: int
     plan_batch: int
     plan: object                # the NetworkPlan served from
+    warmup_steps: int = 0       # warmup forwards actually executed
+    donated: bool = False       # input buffers donated to the program
 
 
 def serve(net_mapping, batch: int, steps: int, warmup: int = 2,
-          mesh=None, seed: int = 0, policy: str = "mapped") -> ServeStats:
+          mesh=None, seed: int = 0, policy: str = "mapped",
+          donate: Optional[bool] = None) -> ServeStats:
     """Steady-state batched forward passes through a compiled plan.
 
     ``batch`` is the *request* batch; when it does not divide the mesh's
     "data" axis the inputs are zero-padded to the plan batch and the
     padded rows masked off the output (pad-and-mask) — the mesh is never
-    silently abandoned for the vmap path."""
+    silently abandoned for the vmap path.
+
+    ``warmup`` is honored exactly, including 0 — with ``warmup=0`` the
+    timed steps include plan compilation (useful for cold-start
+    measurements); the count actually executed is reported in
+    ``ServeStats.warmup_steps``.  ``donate=None`` donates each step's
+    input buffer whenever the plan's platform supports it
+    (`repro.exec.donation_supported`; the input ring then re-uploads a
+    fresh buffer per step — `launch.batching.InputRing`)."""
     import jax
     import jax.numpy as jnp
-    import numpy as np
-    from repro.cnn.mapped_net import zero_pruned_kernels
-    from repro.exec import compile_plan, execute_plan
+    from repro.exec import compile_plan, donation_supported, execute_plan
 
+    if warmup < 0:
+        raise ValueError(f"warmup must be >= 0, got {warmup}")
+    if donate is None:
+        donate = donation_supported(mesh)
     plan_batch = meshlib.pad_to_data_axis(batch, mesh)
     plan = compile_plan(net_mapping, executor_policy=policy, mesh=mesh,
                         batch=plan_batch)
 
-    rng = np.random.RandomState(seed)
-    ks = zero_pruned_kernels(net_mapping, [
-        jnp.asarray(rng.randn(m.layer.k_h, m.layer.k_w,
-                              m.layer.ic // m.group, m.layer.oc) * 0.1,
-                    jnp.float32) for m in net_mapping.layers])
+    rng, ks = _serving_kernels(net_mapping, seed)
     first = net_mapping.layers[0].layer
     x = jnp.asarray(rng.randn(batch, first.ic, first.i_h, first.i_w),
                     jnp.float32)
     if plan_batch != batch:         # ragged: pad to the plan's batch ...
         x = jnp.pad(x, ((0, plan_batch - batch),) + ((0, 0),) * 3)
+    ring = batching.InputRing(x, donate=donate)
 
     def step():
-        y = execute_plan(plan, ks, x, mesh=mesh)
+        y = execute_plan(plan, ks, ring.next(), mesh=mesh, donate=donate)
         return jax.block_until_ready(y[:batch])   # ... mask padded rows
 
-    for _ in range(max(1, warmup)):          # compile + steady the caches
+    for _ in range(warmup):          # compile + steady the caches
         step()
     t0 = time.perf_counter()
     for _ in range(steps):
@@ -120,7 +157,160 @@ def serve(net_mapping, batch: int, steps: int, warmup: int = 2,
     return ServeStats(images_per_s=batch / dt,
                       padded_images_per_s=plan_batch / dt,
                       s_per_batch=dt, request_batch=batch,
-                      plan_batch=plan_batch, plan=plan)
+                      plan_batch=plan_batch, plan=plan,
+                      warmup_steps=warmup, donated=donate)
+
+
+def poisson_arrivals(n: int, rate_per_s: float, max_rows: int,
+                     seed: int = 0) -> Tuple[Tuple[float, int], ...]:
+    """A synthetic ragged arrival schedule: ``n`` requests with
+    exponential inter-arrival times at ``rate_per_s`` (0 → a fully
+    backlogged queue, everything arrives at t=0) and uniform ragged
+    sizes in [1, max_rows]."""
+    import numpy as np
+    if n < 1:
+        raise ValueError(f"need >= 1 request, got {n}")
+    if max_rows < 1:
+        raise ValueError(f"max_rows must be >= 1, got {max_rows}")
+    rng = np.random.RandomState(seed)
+    if rate_per_s > 0:
+        gaps = rng.exponential(1.0 / rate_per_s, size=n)
+        times = np.cumsum(gaps) - gaps[0]       # first request at t=0
+    else:
+        times = np.zeros(n)
+    rows = rng.randint(1, max_rows + 1, size=n)
+    return tuple((float(t), int(r)) for t, r in zip(times, rows))
+
+
+def serve_dynamic(net_mapping, requests: Sequence[Tuple[float, int]], *,
+                  max_batch: int, max_delay_ms: float, mesh=None,
+                  tiers: Optional[Sequence[int]] = None,
+                  policy: str = "mapped", warmup: int = 1, seed: int = 0,
+                  donate: Optional[bool] = None,
+                  clock=time.perf_counter,
+                  sleep=time.sleep) -> batching.DynamicServeStats:
+    """Arrival-driven serving through the plan ladder.
+
+    ``requests`` is a schedule of ``(arrival_s, rows)`` pairs (seconds
+    relative to measurement start, e.g. :func:`poisson_arrivals`).  The
+    loop pushes each arrival into a max-delay :class:`batching.Coalescer`
+    as its time comes, sleeps only until the next arrival or the oldest
+    request's delay deadline, and serves every coalesced batch through
+    the smallest ladder tier that fits (zero-padding the tier's spare
+    rows, which the output mask drops — pad-and-mask isolation is
+    regression-tested).  Once no future arrival remains the queue is
+    force-drained: waiting can no longer grow a batch.
+
+    ``warmup`` forwards per tier run before the clock starts (0 honored:
+    compile time then lands in the measurement).  ``donate=None`` →
+    donate input buffers whenever the plan's platform supports it."""
+    import jax
+    import numpy as np
+    from repro.exec import donation_supported, execute_plan
+
+    if warmup < 0:
+        raise ValueError(f"warmup must be >= 0, got {warmup}")
+    if max_delay_ms < 0:
+        raise ValueError(f"max_delay_ms must be >= 0, got {max_delay_ms}")
+    if donate is None:
+        donate = donation_supported(mesh)
+    requests = tuple(requests)      # may be a generator: snapshot once
+    big = max((r for _, r in requests), default=0)
+    if big > max_batch:             # fail before serving, not mid-drain
+        raise ValueError(f"request of {big} rows exceeds max_batch="
+                         f"{max_batch} — requests are never split")
+    tiers = batching.batch_tiers(max_batch, mesh) if tiers is None \
+        else tuple(tiers)
+    ladder = batching.PlanLadder(net_mapping, tiers, mesh=mesh,
+                                 policy=policy)
+    if ladder.max_batch < max_batch:
+        raise ValueError(
+            f"tiers {ladder.tiers} do not cover max_batch={max_batch} — "
+            f"a full coalesced batch would have no plan to run on")
+    rng, ks = _serving_kernels(net_mapping, seed)
+    first = net_mapping.layers[0].layer
+    shape = (first.ic, first.i_h, first.i_w)
+    pool = rng.randn(ladder.max_batch, *shape).astype(np.float32)
+
+    def run_tier(tier: int, x_np):
+        y = execute_plan(ladder.plans[tier], ks, jax.device_put(x_np),
+                         mesh=mesh, donate=donate)
+        return jax.block_until_ready(y)
+
+    warmup_steps = 0
+    for _ in range(warmup):
+        for t in ladder.tiers:       # compile every tier up front
+            run_tier(t, pool[:t])
+            warmup_steps += 1
+
+    # the coalescer caps batches at the CALLER's max_batch (the
+    # documented "largest coalesced batch"); the ladder's top tier may
+    # sit above it when the mesh data axis pads it up
+    co = batching.Coalescer(max_batch, max_delay_ms / 1e3)
+    # stable sort on TIME ONLY: a plain sorted() would order tied
+    # timestamps (every backlogged stream) by rows, silently reordering
+    # the FIFO the coalescer promises to preserve
+    pending = deque(sorted(requests, key=lambda tr: tr[0]))
+    stats = {t: batching.TierStats(plan_batch=t) for t in ladder.tiers}
+    served_rows = padded_rows = 0
+    t0 = clock()
+    while pending or len(co):
+        now = clock() - t0
+        while pending and pending[0][0] <= now:
+            arrival, rows = pending.popleft()
+            co.push(rows, arrival)   # delay measured from scheduled arrival
+        batch = co.pop(now, force=not pending)
+        if not batch:
+            deadline = co.next_deadline()
+            horizon = min(pending[0][0] if pending else float("inf"),
+                          deadline if deadline is not None else float("inf"))
+            if horizon > now:
+                sleep(horizon - now)
+            continue
+        rows = sum(r.rows for r in batch)
+        tier, _ = ladder.plan_for(rows)
+        x_np = np.zeros((tier,) + shape, np.float32)
+        x_np[:rows] = pool[:rows]    # padded rows stay zero (pad-and-mask)
+        launch = clock() - t0
+        run_tier(tier, x_np)
+        stats[tier].record(batch, launch, exec_s=clock() - t0 - launch)
+        served_rows += rows
+        padded_rows += tier
+    wall = clock() - t0
+    return batching.DynamicServeStats(
+        tiers=stats, request_images=served_rows, padded_images=padded_rows,
+        wall_s=wall, warmup_steps=warmup_steps)
+
+
+def _print_dynamic(net: str, s: batching.DynamicServeStats, *, tag: str,
+                   max_batch: int, max_delay_ms: float,
+                   compiles: int, st: dict) -> None:
+    """Human summary + harness CSV rows (one per served tier, one
+    aggregate) for a dynamic run.  ``st`` is the SEARCH-phase stats
+    snapshot — never the live dict (plan-ladder cache traffic would
+    leak into the search columns)."""
+    print(s.describe())
+    for t in sorted(s.tiers):
+        ts = s.tiers[t]
+        if not ts.batches:
+            continue
+        print(f"serve_dyn/{net}/tier{t},"
+              f"{ts.exec_s / ts.batches * 1e6:.1f},"
+              f"images_per_s={ts.request_images / max(ts.exec_s, 1e-12):.1f};"
+              f"padded_images_per_s="
+              f"{ts.padded_images / max(ts.exec_s, 1e-12):.1f};"
+              f"batches={ts.batches};"
+              f"p50_ms={ts.delay_ms(50):.2f};p95_ms={ts.delay_ms(95):.2f};"
+              f"p99_ms={ts.delay_ms(99):.2f}")
+    print(f"serve_dyn/{net}/all,"
+          f"{s.wall_s / max(s.request_images, 1) * 1e6:.1f},"
+          f"images_per_s={s.images_per_s:.1f};"
+          f"padded_images_per_s={s.padded_images_per_s:.1f};"
+          f"tiers={'/'.join(str(t) for t in sorted(s.tiers))};"
+          f"plan_compiles={compiles};mesh={tag};"
+          f"max_batch={max_batch};max_delay_ms={max_delay_ms};"
+          f"warmup_steps={s.warmup_steps};"
+          f"table_builds={st['table_misses']};disk_hits={st['disk_hits']}")
 
 
 def main(argv=None) -> None:
@@ -137,7 +327,9 @@ def main(argv=None) -> None:
                     help="request batch (padded-and-masked to the plan "
                          "batch when the mesh data axis does not divide)")
     ap.add_argument("--steps", type=int, default=10)
-    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--warmup", type=int, default=2,
+                    help="untimed warmup forwards; 0 is honored (timing "
+                         "then includes plan compilation)")
     ap.add_argument("--policy", default="mapped",
                     choices=("mapped", "reference", "sdk", "auto"),
                     help="plan executor policy (per-layer for 'auto')")
@@ -148,7 +340,26 @@ def main(argv=None) -> None:
                     help="mtime-LRU size cap for --cache-dir")
     ap.add_argument("--no-mesh", action="store_true",
                     help="force the single-device vmap path")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="never donate input buffers (default: donate "
+                         "whenever the plan's platform supports it)")
     ap.add_argument("--seed", type=int, default=0)
+    dyn = ap.add_argument_group(
+        "dynamic batching (arrival-driven; enabled by --max-delay-ms)")
+    dyn.add_argument("--max-delay-ms", type=float, default=None,
+                     help="coalescer max delay: a queued request is "
+                          "served at latest this long after arrival")
+    dyn.add_argument("--max-batch", type=int, default=None,
+                     help="largest coalesced batch / top ladder tier "
+                          "(default: --batch)")
+    dyn.add_argument("--arrival-rate", type=float, default=0.0,
+                     help="synthetic Poisson arrivals per second "
+                          "(0: fully backlogged queue)")
+    dyn.add_argument("--requests", type=int, default=32,
+                     help="number of synthetic requests to serve")
+    dyn.add_argument("--max-request", type=int, default=None,
+                     help="largest rows per ragged request (default: "
+                          "min(4, max-batch))")
     args = ap.parse_args(argv)
 
     if args.cache_dir is not None:
@@ -157,29 +368,52 @@ def main(argv=None) -> None:
     mapping, search_s = map_for_serving(
         args.net, ArrayConfig(args.ar, args.ac), args.alg,
         grid=args.grid, p_max=args.p_max)
-    st = memo.stats
+    # snapshot at the measurement boundary: serving traffic (plan-cache
+    # lookups, ladder compiles) must not leak into the search stats
+    st = memo.snapshot()
     print(f"{args.net} [{args.alg}] grid={mapping.grid.r}x{mapping.grid.c} "
           f"total_cycles={mapping.total_cycles} search={search_s*1e3:.1f}ms "
           f"(table_builds={st['table_misses']} disk_hits={st['disk_hits']} "
           f"disk_writes={st['disk_writes']})")
 
+    donate = False if args.no_donate else None
+    if args.max_delay_ms is not None:
+        from repro.exec import compile_counts
+        max_batch = args.max_batch or args.batch
+        max_request = args.max_request or min(4, max_batch)
+        mesh = None if args.no_mesh else serving_mesh_for(mapping, max_batch)
+        tag = meshlib.mesh_tag(mesh) if mesh is not None else "vmap"
+        reqs = poisson_arrivals(args.requests, args.arrival_rate,
+                                max_request, seed=args.seed)
+        s = serve_dynamic(mapping, reqs, max_batch=max_batch,
+                          max_delay_ms=args.max_delay_ms, mesh=mesh,
+                          policy=args.policy, warmup=args.warmup,
+                          seed=args.seed, donate=donate)
+        compiles = sum(compile_counts(net=mapping).values())
+        _print_dynamic(args.net, s, tag=tag, max_batch=max_batch,
+                       max_delay_ms=args.max_delay_ms, compiles=compiles,
+                       st=st)
+        return
+
     mesh = None if args.no_mesh else serving_mesh_for(mapping, args.batch)
     tag = meshlib.mesh_tag(mesh) if mesh is not None else "vmap"
     s = serve(mapping, args.batch, args.steps, warmup=args.warmup,
-              mesh=mesh, seed=args.seed, policy=args.policy)
+              mesh=mesh, seed=args.seed, policy=args.policy, donate=donate)
     print(s.plan.describe())
     pad_note = (f" ({s.padded_images_per_s:.1f} padded images/s at "
                 f"plan batch {s.plan_batch})"
                 if s.plan_batch != s.request_batch else "")
     print(f"mesh={tag} batch={args.batch}: {s.images_per_s:.1f} images/s"
           f"{pad_note} ({s.s_per_batch*1e3:.1f} ms/batch, "
-          f"executor={args.policy})")
+          f"executor={args.policy}, warmup_steps={s.warmup_steps}, "
+          f"donated={s.donated})")
     print(f"serve/{args.net}/b{args.batch},{s.s_per_batch*1e6:.1f},"
           f"images_per_s={s.images_per_s:.1f};"
           f"padded_images_per_s={s.padded_images_per_s:.1f};"
           f"plan_batch={s.plan_batch};"
           f"dispatches={s.plan.host_dispatches};mesh={tag};"
-          f"search_ms={search_s*1e3:.1f};table_builds={st['table_misses']}")
+          f"search_ms={search_s*1e3:.1f};table_builds={st['table_misses']};"
+          f"disk_hits={st['disk_hits']}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 """CNN serving driver (launch/serve_cnn.py): maps with the persistent
 cache, serves batches through executor="mapped", reports images/s."""
 import jax
+import pytest
 
 from repro.core import ArrayConfig, MacroGrid, memo
 from repro.launch import serve_cnn
@@ -50,6 +51,105 @@ def test_serve_returns_effective_and_padded_rates():
     assert s.plan_batch == s.request_batch == 2
     assert s.images_per_s == s.padded_images_per_s > 0
     assert s.plan.host_dispatches == 1       # one fused program per step
+    assert s.warmup_steps == 1
+    assert not s.donated                     # CPU: no donation
+
+
+def test_serve_honors_warmup_zero(monkeypatch):
+    """Regression: serve(warmup=0) used to run max(1, warmup) warmup
+    steps — 0 must mean 0 (timing then includes compile) and the actual
+    count surfaces in ServeStats.warmup_steps."""
+    import repro.exec as exec_mod
+    calls = []
+    real = exec_mod.execute_plan
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(exec_mod, "execute_plan", counting)
+    m, _ = serve_cnn.map_for_serving("cnn8", ArrayConfig(512, 512),
+                                     "Tetris-SDK", grid=MacroGrid(1, 1))
+    s = serve_cnn.serve(m, batch=1, steps=2, warmup=0, mesh=None)
+    assert s.warmup_steps == 0
+    assert len(calls) == 2               # exactly the timed steps
+    calls.clear()
+    s = serve_cnn.serve(m, batch=1, steps=2, warmup=3, mesh=None)
+    assert s.warmup_steps == 3 and len(calls) == 5
+    with pytest.raises(ValueError, match="warmup"):
+        serve_cnn.serve(m, batch=1, steps=1, warmup=-1)
+
+
+def _parse_kv(row: str) -> dict:
+    return dict(kv.split("=") for kv in row.strip().split(",")[-1].split(";")
+                if "=" in kv)
+
+
+def test_main_search_stats_snapshot_regression(capsys, tmp_path):
+    """Regression (memo.stats aliasing): the final CSV row must report
+    the SEARCH-phase counters, not the live dict after serve() — plan
+    compilation during serving hits the disk cache and used to leak
+    into the reported search stats."""
+    args = ["--net", "cnn8", "--batch", "2", "--steps", "1",
+            "--warmup", "1", "--grid", "2x2", "--cache-dir",
+            str(tmp_path)]
+    memo.clear()
+    try:
+        serve_cnn.main(args)              # cold: populate mapping + plan
+        memo.clear()                      # drop in-memory, keep disk
+        capsys.readouterr()
+        serve_cnn.main(args)              # warm: search AND plan disk-hit
+        out = capsys.readouterr().out
+        live_hits = memo.stats["disk_hits"]
+    finally:
+        memo.set_disk_cache(None)
+        memo.clear()
+    search_line = next(ln for ln in out.splitlines() if "search=" in ln)
+    search_hits = int(search_line.split("disk_hits=")[1].split(" ")[0])
+    csv = _parse_kv(next(ln for ln in out.splitlines()
+                         if ln.startswith("serve/cnn8/")))
+    assert int(csv["disk_hits"]) == search_hits
+    assert int(csv["table_builds"]) == 0      # warm search: no builds
+    # the plan load DID hit the disk after the snapshot — the live dict
+    # would have reported more (this is what the old code leaked)
+    assert live_hits > search_hits
+
+
+def test_main_dynamic_batching_cli(capsys, tmp_path):
+    """Dynamic mode end-to-end: --max-delay-ms drives the coalescer +
+    tier ladder; per-tier and aggregate CSV rows come out, and every
+    tier's plan compiled exactly once."""
+    memo.clear()
+    try:
+        serve_cnn.main(["--net", "cnn8", "--grid", "2x2",
+                        "--max-delay-ms", "1", "--max-batch", "4",
+                        "--requests", "8", "--warmup", "1",
+                        "--cache-dir", str(tmp_path)])
+    finally:
+        memo.set_disk_cache(None)
+        memo.clear()
+    out = capsys.readouterr().out
+    assert "queue-delay p50=" in out
+    agg = _parse_kv(next(ln for ln in out.splitlines()
+                         if ln.startswith("serve_dyn/cnn8/all,")))
+    assert agg["tiers"] == "1/2/4"
+    assert int(agg["plan_compiles"]) == 3      # once per tier
+    assert float(agg["images_per_s"]) > 0
+    assert float(agg["padded_images_per_s"]) >= float(agg["images_per_s"])
+    assert any(ln.startswith("serve_dyn/cnn8/tier") for ln
+               in out.splitlines())
+
+
+def test_dynamic_effective_rate_beats_fixed_ragged():
+    """ISSUE 5 acceptance: on the same backlogged ragged stream the
+    dynamic coalescer's effective images/s must be >= the fixed-batch
+    driver's (interleaved medians, benchmarks/serve_bench.py)."""
+    from benchmarks import serve_bench
+    rows = serve_bench.run(full=False)
+    by_name = {r.name: _parse_kv(r.csv()) for r in rows}
+    fixed = float(by_name["serve_dyn/cnn8/fixed-ragged"]["images_per_s"])
+    dyn = float(by_name["serve_dyn/cnn8/dynamic"]["images_per_s"])
+    assert dyn >= fixed, (dyn, fixed)
 
 
 def test_pad_to_data_axis():
@@ -75,7 +175,10 @@ def test_serve_ragged_batch_pads_and_masks():
     batch of 3 does NOT divide the serving mesh's data axis (2) — the
     driver pads to the plan batch (4), serves through the mesh, masks
     the padded row, and the 3 real outputs are bit-identical to the
-    single-device vmap plan."""
+    single-device vmap plan.  Pad-and-mask isolation is total: garbage
+    in the padded row leaves the request rows bit-identical, and the
+    masked loss's input gradient matches the vmap plan on the request
+    rows with an exactly-zero gradient on the padded row."""
     import os
     import subprocess
     import sys
@@ -106,8 +209,23 @@ x3 = jnp.asarray(rng.randn(3, first.ic, first.i_h, first.i_w), jnp.float32)
 x4 = jnp.pad(x3, ((0, 1), (0, 0), (0, 0), (0, 0)))
 plan = compile_plan(net, executor_policy="mapped", mesh=mesh, batch=4)
 y = execute_plan(plan, ks, x4, mesh=mesh)[:3]
-y_ref = execute_plan(compile_plan(net, executor_policy="mapped"), ks, x3)
+vmap_plan = compile_plan(net, executor_policy="mapped")
+y_ref = execute_plan(vmap_plan, ks, x3)
 assert bool(jnp.all(y == y_ref)), "masked sharded outputs != vmap"
+# isolation: garbage in the padded row must not touch request rows
+x4_dirty = x4.at[3].set(7.5)
+y_dirty = execute_plan(plan, ks, x4_dirty, mesh=mesh)[:3]
+assert bool(jnp.all(y_dirty == y_ref)), "padded row leaked into outputs"
+# gradient isolation: masked loss -> request-row grads match the vmap
+# plan, padded-row grad exactly zero
+g4 = jax.grad(lambda xx: jnp.sum(
+    execute_plan(plan, ks, xx, mesh=mesh)[:3] ** 2))(x4)
+g3 = jax.grad(lambda xx: jnp.sum(
+    execute_plan(vmap_plan, ks, xx) ** 2))(x3)
+scale = float(jnp.max(jnp.abs(g3)))
+assert float(jnp.max(jnp.abs(g4[:3] - g3))) <= 1e-6 * scale, \
+    "request-row grads drift under pad-and-mask"
+assert bool(jnp.all(g4[3] == 0)), "padded row has nonzero gradient"
 print("RAGGED-OK")
 """
     env = dict(os.environ,
