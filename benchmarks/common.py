@@ -2,12 +2,23 @@
 
 Every benchmark module exposes ``run(full: bool) -> list[Row]``;
 run.py prints ``name,us_per_call,derived`` per the harness contract.
+
+The interleaved-rounds/median measurement shape every comparative
+benchmark here uses lives in `repro.tune.measure` (it is also the
+autotuner's measurement primitive) — re-exported below so benchmark
+modules keep importing it from `.common`.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
 from typing import Callable
+
+from repro.tune.measure import (interleaved_medians, interleaved_rounds,
+                                median)
+
+__all__ = ["Row", "timed", "median", "interleaved_rounds",
+           "interleaved_medians"]
 
 
 @dataclass

@@ -18,8 +18,6 @@ compiles the whole 38-layer chain.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -29,7 +27,7 @@ from repro.cnn.mapped_net import zero_pruned_kernels
 from repro.exec import (apply_layer, compile_plan, execute_layerwise,
                         execute_looped, execute_plan)
 
-from .common import Row
+from .common import Row, interleaved_medians
 
 BATCH = 4
 GRID = MacroGrid(2, 2)
@@ -43,18 +41,11 @@ def _kernels(net, rng):
 
 
 def _time_pair(fn_a, fn_b, rounds: int = 5):
-    """Median us of two warm paths, measured in alternating rounds so
-    machine noise (2-core CI boxes) hits both equally."""
-    times = ([], [])
-    for fn in (fn_a, fn_b):
-        fn()                                # compile + warm caches
-    for _ in range(rounds):
-        for ts, fn in zip(times, (fn_a, fn_b)):
-            t0 = time.perf_counter()
-            fn()
-            ts.append((time.perf_counter() - t0) * 1e6)
-    med = [sorted(ts)[len(ts) // 2] for ts in times]
-    return med[0], med[1]
+    """Median us of two warm paths via the shared interleaved-rounds
+    primitive (`repro.tune.measure`), so machine noise (2-core CI
+    boxes) hits both equally."""
+    a, b = interleaved_medians([fn_a, fn_b], rounds=rounds, warmup=1)
+    return a * 1e6, b * 1e6
 
 
 def _rows(label: str, plan, us_loop: float, us_fused: float):

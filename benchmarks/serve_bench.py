@@ -28,15 +28,11 @@ from repro.core import ArrayConfig, MacroGrid, map_net, networks
 from repro.exec import compile_plan, execute_plan
 from repro.launch import serve_cnn
 
-from .common import Row
+from .common import Row, interleaved_rounds, median
 
 BATCH = 4                          # fixed plan batch == top ladder tier
 SIZES = (1, 3, 2, 1, 4, 2, 3, 1)   # ragged request rows (backlogged)
 ROUNDS = 5
-
-
-def _median(xs):
-    return sorted(xs)[len(xs) // 2]
 
 
 def run(full: bool = False):
@@ -65,17 +61,14 @@ def run(full: bool = False):
                                     max_delay_ms=1.0, warmup=1)
         return s.images_per_s, s.padded_images_per_s
 
-    fixed_round()                   # compile + warm both paths
-    dynamic_round()
-    eff = ([], [])
-    pad = ([], [])
-    for _ in range(ROUNDS):         # interleaved: noise hits both equally
-        for i, rnd in enumerate((fixed_round, dynamic_round)):
-            e, p = rnd()
-            eff[i].append(e)
-            pad[i].append(p)
-    f_eff, d_eff = _median(eff[0]), _median(eff[1])
-    f_pad, d_pad = _median(pad[0]), _median(pad[1])
+    # interleaved rounds (shared primitive): noise hits both equally;
+    # the measured quantity is each round's (effective, padded) rates,
+    # so medians are taken per component over the returned values
+    outs = interleaved_rounds([fixed_round, dynamic_round], ROUNDS,
+                              warmup=1)
+    (f_eff, f_pad), (d_eff, d_pad) = (
+        (median([e for e, _ in o]), median([p for _, p in o]))
+        for o in outs)
     return [
         Row("serve_dyn/cnn8/fixed-ragged", 1e6 / f_eff,
             f"images_per_s={f_eff:.1f};padded_images_per_s={f_pad:.1f};"

@@ -1,0 +1,99 @@
+"""Autotuner acceptance bench: tuned vs the "auto" default, measured.
+
+For each bench network (cnn8, inception, densenet40 — a prefix in smoke
+mode to keep CI compile time sane) this runs the measured-feedback
+search (`repro.tune.autotune`) and reports the winner's interleaved-
+median wall-clock against the auto-policy baseline FROM THE SAME FINAL
+ROUNDS — the ISSUE 6 acceptance quantity: tuned must beat or tie auto
+(the baseline candidate survives every halving cut, so a winner slower
+than the default cannot exist by construction; the rows make the margin
+visible).
+
+    python -m benchmarks.tune_bench --smoke           # CI: tiny budget
+    python -m benchmarks.tune_bench --full            # whole densenet40
+    python -m benchmarks.tune_bench --smoke --json out.json \
+        --trajectory BENCH_autotune.json --pr "PR 6"
+
+Prints the harness CSV (``name,usec,extras``) to stdout — CI tees it
+into ``bench-out/tune_bench.csv``.  Exposes ``run(full)`` returning
+`benchmarks.common.Row`s like every other bench module, though it is
+not in run.py's default MODULES: a measured search is minutes, not the
+seconds budget ``python -m benchmarks.run`` holds to.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, Optional
+
+from repro.core import ArrayConfig, MacroGrid, map_net, networks
+from repro import tune
+
+from .common import Row
+
+BATCH = 4
+GRID = MacroGrid(2, 2)
+
+
+def _nets(full: bool):
+    return [("cnn8", networks.cnn8()),
+            ("inception", networks.inception()),
+            ("densenet40" if full else "densenet40[:12]",
+             networks.densenet40() if full else
+             networks.densenet40()[:12])]
+
+
+def tune_all(*, full: bool = False, budget: Optional[tune.TuneBudget] = None,
+             force: bool = False) -> Dict[str, tune.TuneResult]:
+    """Autotune every bench net; smoke mode uses the tiny CI budget."""
+    budget = budget or (tune.TuneBudget() if full else tune.SMOKE_BUDGET)
+    arr = ArrayConfig(64, 64)
+    results = {}
+    for label, layers in _nets(full):
+        nm = map_net(label, layers, arr, "TetrisG-SDK", GRID,
+                     groups=(1, 2))
+        results[label] = tune.autotune(nm, batch=BATCH, budget=budget,
+                                       force=force)
+    return results
+
+
+def run(full: bool = False):
+    """Harness-shaped entry: one Row per net (summary only — trial rows
+    stay in the CSV artifact the CLI writes)."""
+    results = tune_all(full=full)
+    return [Row(name, us, extras)
+            for name, us, extras in tune.report.csv_rows(results)
+            if "/trial" not in name]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--smoke", action="store_true",
+                      help="tiny budget + densenet40 prefix (the CI run)")
+    mode.add_argument("--full", action="store_true",
+                      help="default budget + whole densenet40")
+    ap.add_argument("--force", action="store_true",
+                    help="re-measure even with a persisted winner")
+    ap.add_argument("--csv", default=None,
+                    help="also write the CSV to this path")
+    ap.add_argument("--json", default=None,
+                    help="write the full results (every trial) as JSON")
+    ap.add_argument("--trajectory", default=None,
+                    help="append a BENCH_autotune.json ledger entry here")
+    ap.add_argument("--pr", default="",
+                    help="ledger entry tag for --trajectory")
+    args = ap.parse_args(argv)
+
+    results = tune_all(full=args.full, force=args.force)
+    print(tune.write_csv(results, args.csv), end="")
+    if args.json:
+        tune.write_json(results, args.json)
+    if args.trajectory:
+        tune.append_trajectory(
+            args.trajectory,
+            tune.trajectory_entry(results, pr=args.pr,
+                                  note="smoke" if args.smoke else "full"))
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,14 @@ shape, batch) under their own :data:`PLAN_VERSION` — a serving replica
 with a warm disk cache skips both the window search *and* plan
 compilation.
 
+Autotuner winners (:mod:`repro.tune`) persist through
+:func:`load_tuning` / :func:`store_tuning`, keyed on (net mapping,
+device-fleet signature, batch profile) under :data:`TUNE_VERSION`.
+``load_tuning`` is a *peek* — no compute fallback — so a cold replica
+with a warm disk cache adopts the tuned configuration with zero
+re-measurement, and a miss simply means "not tuned yet" (callers fall
+back to the ``"auto"`` policy).
+
 Both in-memory caches are LRU-bounded (:func:`set_cache_limits`) so a
 long-lived serving process cannot grow them without limit; hit / miss /
 eviction and disk hit / miss / write counters are surfaced in ``stats``.
@@ -87,7 +95,12 @@ SCHEMA_VERSION = 1
 #: Separate version for compiled NetworkPlan entries (:func:`cached_plan`)
 #: — bump when the plan IR (exec/plan.py dataclasses) or the compile
 #: semantics change without the mapping schema moving.
-PLAN_VERSION = 1
+PLAN_VERSION = 2        # 2: NetworkPlan.lookahead field (ISSUE 6)
+
+#: Version for persisted autotuner winners (:func:`load_tuning` /
+#: :func:`store_tuning`) — bump when the TunedConfig schema or the
+#: tuning-key layout (repro/tune) changes.
+TUNE_VERSION = 1
 
 _ENV_VAR = "REPRO_MAPPING_CACHE"
 _MAX_BYTES_ENV_VAR = "REPRO_MAPPING_CACHE_MAX_BYTES"
@@ -382,6 +395,46 @@ def cached_plan(key: Tuple, compute: Callable[[], Any]) -> Any:
     :data:`PLAN_VERSION`."""
     return cached_result(("plan", PLAN_VERSION) + key, compute,
                          persist=True)
+
+
+def _tune_key(key: Tuple) -> Tuple:
+    return ("tune", TUNE_VERSION) + key
+
+
+def load_tuning(key: Tuple) -> Any:
+    """Persisted-autotuner PEEK: the tuned config stored under ``key``
+    (in memory, else on disk when a disk cache is configured), or
+    ``None`` on a miss.  Unlike :func:`cached_result` there is no
+    ``compute`` fallback — measurement is expensive and belongs to the
+    caller (`repro.tune.autotune`); a cold process with a warm disk
+    cache therefore loads the tuned config with ZERO measurements
+    (asserted via these counters in tests/test_tune.py)."""
+    if not _enabled:
+        return None
+    k = _tune_key(key)
+    try:
+        return _lru_get(_results, k, "result_hits")
+    except KeyError:
+        pass
+    stats["result_misses"] += 1
+    if disk_cache_dir() is None:
+        return None
+    out = _disk_load(k)
+    if out is not None:
+        _lru_put(_results, k, out, _result_limit, "result_evictions")
+    return out
+
+
+def store_tuning(key: Tuple, value: Any) -> None:
+    """Persist an autotuner winner under ``key`` — the in-memory result
+    cache plus the disk layer (when configured), under
+    :data:`TUNE_VERSION`."""
+    if not _enabled:
+        return
+    k = _tune_key(key)
+    _lru_put(_results, k, value, _result_limit, "result_evictions")
+    if disk_cache_dir() is not None:
+        _disk_store(k, value)
 
 
 def memoized_search(name: str, layer, array, grid: MacroGrid,

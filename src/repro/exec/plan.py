@@ -66,7 +66,7 @@ class LayerPlan:
     use_mesh: bool              # shard_map vs vmap, decided at compile
     interpret: bool = False     # sdk: pallas interpret mode (off-TPU)
     block: str = "auto"         # sdk: tiling mode
-    vmem_budget: int = 8 * 1024 * 1024
+    vmem_budget: int = 8 * 1024 * 1024  # sdk: resolved byte budget
 
 
 @dataclass(frozen=True)
@@ -85,6 +85,13 @@ class NetworkPlan:
     mesh_axes: Optional[Tuple[Tuple[str, int], ...]]
     batch: Optional[int]
     chained: bool = True
+    #: cross-layer pipeline depth of the fused program (exec/run.py):
+    #: kernels of layers beyond ``i + 1 + lookahead`` are fenced behind
+    #: layer i's carry.  A compile-time field (formerly the module
+    #: constant ``_LOOKAHEAD``) so the autotuner — and users — can sweep
+    #: it without monkeypatching; each value is its own plan, so
+    #: changing it recompiles the fused program exactly once per value.
+    lookahead: int = 1
 
     @property
     def executors(self) -> Tuple[str, ...]:
@@ -110,6 +117,7 @@ class NetworkPlan:
                if self.mesh_axes else "vmap")
         return (f"plan[{self.net.name}] layers={len(self.layers)} "
                 f"steps={self.total_steps} mesh={tag} "
+                f"lookahead={self.lookahead} "
                 f"dispatches/forward={self.host_dispatches} ({execs})")
 
 
@@ -168,7 +176,7 @@ def _resolve_policy(policy: PolicyLike, net: NetworkMapping, *,
 
 def _compile(net: NetworkMapping, execs: Tuple[str, ...], mesh,
              batch: Optional[int], chained: bool, interpret: bool,
-             block: str, vmem_budget: int) -> NetworkPlan:
+             block: str, vmem_budget: int, lookahead: int) -> NetworkPlan:
     if (mesh is not None and "data" in mesh.axis_names
             and batch is not None and batch % mesh.shape["data"]):
         # refuse rather than silently vmap the whole net: ragged batches
@@ -209,26 +217,39 @@ def _compile(net: NetworkMapping, execs: Tuple[str, ...], mesh,
             else lay.oc
     return NetworkPlan(net=net, layers=tuple(layers),
                        mesh_axes=mesh_axes(mesh), batch=batch,
-                       chained=chained)
+                       chained=chained, lookahead=lookahead)
 
 
 def compile_plan(net: NetworkMapping, *,
                  executor_policy: PolicyLike = "auto",
                  mesh=None, batch: Optional[int] = None,
                  chained: bool = True,
-                 interpret: Optional[bool] = None, block: str = "auto",
-                 vmem_budget: int = 8 * 1024 * 1024) -> NetworkPlan:
+                 interpret: Optional[bool] = None,
+                 block: Optional[str] = None,
+                 vmem_budget: Optional[int] = None,
+                 lookahead: Optional[int] = None) -> NetworkPlan:
     """Lower ``net`` once into a :class:`NetworkPlan`.
 
     ``executor_policy`` — ``"auto"`` (per-layer heuristic, see
-    `_auto_executor`), one executor name for every layer, a per-layer
-    sequence, or a callable ``LayerMapping -> name``.  ``mesh``/``batch``
+    `_auto_executor`), ``"tuned"`` (the measured-feedback autotuner's
+    persisted winner for this net / device fleet / batch — see
+    `repro.tune`; falls back to ``"auto"`` when nothing has been tuned),
+    one executor name for every layer, a per-layer sequence, or a
+    callable ``LayerMapping -> name``.  ``mesh``/``batch``
     fix the sharding decisions (`macro_mesh_fits` per layer, evaluated
     here, never at dispatch); a batch that does not divide the mesh's
-    data axis is refused here — pad it first (`mesh.pad_to_data_axis`).  ``chained=False`` compiles a *layerwise* plan — per-layer
-    executor dispatch without inter-layer glue (the `apply_cnn` path,
-    which owns its own pooling/bias plumbing); such plans cannot be
-    passed to `execute_plan`.
+    data axis is refused here — pad it first (`mesh.pad_to_data_axis`).
+    ``chained=False`` compiles a *layerwise* plan — per-layer executor
+    dispatch without inter-layer glue (the `apply_cnn` path, which owns
+    its own pooling/bias plumbing); such plans cannot be passed to
+    `execute_plan`.
+
+    ``lookahead`` (default 1) is the fused program's cross-layer
+    pipeline depth; ``vmem_budget`` (default: the
+    ``REPRO_SDK_VMEM_BUDGET`` environment variable, else 8 MiB) bounds
+    the sdk executor's ``block="auto"`` whole-array working set.  With
+    ``executor_policy="tuned"`` any of ``lookahead`` / ``block`` /
+    ``vmem_budget`` left unset take the tuned values.
 
     Every layer's executed schedule is asserted equal to its
     ``LayerMapping.cycles`` here (compile time), and a mis-chained
@@ -236,19 +257,43 @@ def compile_plan(net: NetworkMapping, *,
     in memory and, when a disk cache is configured, across processes —
     keyed on (net, resolved policy, mesh shape, batch, flags).
     """
+    from repro.kernels.im2win_conv import default_vmem_budget
     if not net.layers:
         raise ValueError(f"{net.name}: cannot plan an empty network")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if executor_policy == "tuned":
+        # lazy import: repro.tune compiles plans, so the dependency
+        # must point tune -> exec at module scope, not both ways
+        from repro.tune import tuned_config
+        cfg = tuned_config(net, batch=batch)
+        if cfg is None:
+            executor_policy = "auto"
+        else:
+            executor_policy = cfg.candidate.policy
+            if lookahead is None:
+                lookahead = cfg.candidate.lookahead
+            if block is None:
+                block = cfg.candidate.block
+            if vmem_budget is None:
+                vmem_budget = cfg.candidate.vmem_budget
+    if lookahead is None:
+        lookahead = 1
+    if lookahead < 0:
+        raise ValueError(f"lookahead must be >= 0, got {lookahead}")
+    if block is None:
+        block = "auto"
+    if vmem_budget is None:
+        vmem_budget = default_vmem_budget()
     execs = _resolve_policy(executor_policy, net,
                             backend=jax.default_backend())
     key = (net, execs, mesh_axes(mesh), batch, chained, interpret, block,
-           vmem_budget)
+           vmem_budget, lookahead)
 
     def _compile_counted():
         _note_compile(key)
         return _compile(net, execs, mesh, batch, chained, interpret,
-                        block, vmem_budget)
+                        block, vmem_budget, lookahead)
 
     return memo.cached_plan(key, _compile_counted)
 

@@ -60,12 +60,12 @@ def _layer_conv(lp: LayerPlan, x: jnp.ndarray, kernel: jnp.ndarray,
     return fn(m, x, kernel)
 
 
-#: Cross-layer pipeline depth of the fused program: kernels of layers
-#: beyond ``i + 1 + _LOOKAHEAD`` are fenced behind the carry at layer
-#: i's boundary, so exactly one layer of kernel-side prep (weight-matrix
-#: blocks, gather indices) overlaps the current layer's psum drain while
-#: the live working set stays bounded.
-_LOOKAHEAD = 1
+#: Fused-forward trace counter: `_forward` with ``jitted=False`` runs
+#: only while `_execute_jit` / `_execute_jit_donated` traces (jit caches
+#: replays), so this counts whole-program recompiles — the lookahead
+#: regression test asserts exactly one per distinct plan.lookahead.
+#: Diagnostics only; reset freely in tests.
+fused_trace_count: int = 0
 
 
 @jax.custom_jvp
@@ -92,6 +92,9 @@ def _forward(plan: NetworkPlan, kernels, x: jnp.ndarray, mesh,
         raise ValueError(f"{lay0.name}: input has {x.shape[1]} channels,"
                          f" layer expects {lay0.ic}")
     fused = not jitted and conv is None     # one program: fence hoisting
+    if fused:
+        global fused_trace_count
+        fused_trace_count += 1
     kernels = list(kernels)
     for i, lp in enumerate(plan.layers):
         lay = lp.mapping.layer
@@ -105,7 +108,13 @@ def _forward(plan: NetworkPlan, kernels, x: jnp.ndarray, mesh,
             x = jnp.concatenate([skip, y], axis=1)
         else:                       # "chain" / "last"
             x = y
-        j = i + 1 + _LOOKAHEAD
+        # cross-layer pipeline depth (plan.lookahead, a compile_plan
+        # argument since ISSUE 6): kernels of layers beyond
+        # ``i + 1 + lookahead`` stay fenced behind this carry, so that
+        # many layers of kernel-side prep (weight-matrix blocks, gather
+        # indices) may overlap the current psum drain while the live
+        # working set stays bounded
+        j = i + 1 + plan.lookahead
         if fused and j < len(plan.layers):
             # bounded pipelining (module docstring): layers past the
             # lookahead window cannot start until this carry exists

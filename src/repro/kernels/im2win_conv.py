@@ -34,6 +34,7 @@ from __future__ import annotations
 import collections
 import functools
 import math
+import os
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -43,6 +44,35 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.tetris import factor_pairs_square_first
 from repro.core.types import LayerMapping
+
+#: Fallback ``block="auto"`` VMEM budget (bytes) when the environment
+#: does not override it.
+DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+_VMEM_ENV_VAR = "REPRO_SDK_VMEM_BUDGET"
+
+
+def default_vmem_budget() -> int:
+    """The sdk executor's ``block="auto"`` VMEM budget in bytes when the
+    caller passes ``vmem_budget=None``: the ``REPRO_SDK_VMEM_BUDGET``
+    environment variable, else :data:`DEFAULT_VMEM_BUDGET` (8 MiB).  An
+    explicit byte parameter threaded through `compile_plan` / `sdk_conv`
+    — the autotuner sweeps it — with the env var as the deploy-time
+    default.  Read per call (not cached at import) so tests and drivers
+    can re-point it."""
+    env = os.environ.get(_VMEM_ENV_VAR)
+    if not env:
+        return DEFAULT_VMEM_BUDGET
+    try:
+        budget = int(env)
+    except ValueError:
+        raise ValueError(
+            f"{_VMEM_ENV_VAR}={env!r} is not an integer byte count "
+            f"(suffixes like '8M' are not supported)") from None
+    if budget <= 0:
+        raise ValueError(f"{_VMEM_ENV_VAR}={env!r} must be > 0 "
+                         f"(unset it for the {DEFAULT_VMEM_BUDGET}-byte "
+                         f"default)")
+    return budget
 
 
 def select_window(o_h: int, o_w: int, k: int, c: int, oc: int,
@@ -270,13 +300,15 @@ def _vmem_bytes_whole(b, ic_t, oc_t, layer) -> int:
 def sdk_conv_traced(mapping: LayerMapping, x: jnp.ndarray,
                     kernel: jnp.ndarray, *, interpret: bool = False,
                     block: str = "auto",
-                    vmem_budget: int = 8 * 1024 * 1024) -> jnp.ndarray:
+                    vmem_budget: Optional[int] = None) -> jnp.ndarray:
     """Trace-time body of :func:`sdk_conv` — see it for the contract.
     Public plan-consuming entry: `repro.exec.run` inlines it into the
     whole-network program.  Builds one pallas_call per (group, tile);
     stand-alone dispatch goes through :func:`sdk_conv_jit` so the
     closures are built once per static (mapping, shapes, flags)
     signature, not once per call."""
+    if vmem_budget is None:     # trace-time resolution (static argument)
+        vmem_budget = default_vmem_budget()
     _trace_counts[_trace_key(mapping, x, kernel, interpret=interpret,
                              block=block, vmem_budget=vmem_budget)] += 1
     layer = mapping.layer
@@ -401,7 +433,7 @@ sdk_conv_jit.__doc__ = (
 
 def sdk_conv(mapping: LayerMapping, x: jnp.ndarray, kernel: jnp.ndarray,
              *, interpret: bool = False, block: str = "auto",
-             vmem_budget: int = 8 * 1024 * 1024) -> jnp.ndarray:
+             vmem_budget: Optional[int] = None) -> jnp.ndarray:
     """Execute a convolution exactly as `mapping` prescribes, on the MXU.
 
     Same contract as cnn.cim_conv2d: x (batch, ic, i_h, i_w) pre-padded,
@@ -420,14 +452,18 @@ def sdk_conv(mapping: LayerMapping, x: jnp.ndarray, kernel: jnp.ndarray,
     window patch / output tile per grid step with the loads and stores
     double-buffered against the MXU (:func:`_sdk_kernel_blocked` — VMEM
     use independent of layer size), "auto" chooses "window" whenever the
-    whole-array working set exceeds ``vmem_budget``.
+    whole-array working set exceeds ``vmem_budget`` (``None`` —
+    :func:`default_vmem_budget`, i.e. ``REPRO_SDK_VMEM_BUDGET`` or
+    8 MiB).
 
     Dispatches through :func:`sdk_conv_jit` (mapping and flags static):
     repeat calls with the same shapes reuse the compiled program instead
     of rebuilding every pallas_call closure.
     """
-    return sdk_conv_jit(mapping, x, kernel, interpret=interpret,
-                        block=block, vmem_budget=vmem_budget)
+    if vmem_budget is None:     # resolve before dispatch: None and the
+        vmem_budget = default_vmem_budget()  # explicit default share a
+    return sdk_conv_jit(mapping, x, kernel, interpret=interpret,  # cache
+                        block=block, vmem_budget=vmem_budget)     # entry
 
 
 def sdk_conv_cycles(mapping: LayerMapping) -> int:

@@ -166,7 +166,9 @@ class PlanLadder:
     per-key evidence."""
 
     def __init__(self, net_mapping, tiers: Sequence[int], *, mesh=None,
-                 policy: str = "mapped"):
+                 policy="mapped", lookahead: Optional[int] = None,
+                 block: Optional[str] = None,
+                 vmem_budget: Optional[int] = None):
         from repro.exec import compile_plan
         self.tiers = tuple(sorted(set(int(t) for t in tiers)))
         if not self.tiers:
@@ -178,8 +180,13 @@ class PlanLadder:
                     f"{meshlib.data_axis_size(mesh)} — build tiers with "
                     f"batch_tiers(max_batch, mesh)")
         self.mesh = mesh
+        # policy is any compile_plan PolicyLike (a name, "auto"/"tuned",
+        # a per-layer tuple); lookahead / block / vmem_budget pass
+        # through unset (None) so "tuned" can fill them per plan
         self.plans = {t: compile_plan(net_mapping, executor_policy=policy,
-                                      mesh=mesh, batch=t)
+                                      mesh=mesh, batch=t,
+                                      lookahead=lookahead, block=block,
+                                      vmem_budget=vmem_budget)
                       for t in self.tiers}
 
     @property

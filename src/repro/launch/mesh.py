@@ -91,16 +91,81 @@ def make_serving_mesh(sub_r: int, sub_c: int, batch: int, devices=None):
     return best if best is not None else base
 
 
-def serving_mesh_for(net_mapping, batch: int, devices=None):
-    """Largest mesh every layer of a ``NetworkMapping`` can shard onto:
-    the mesh macro axes must divide each layer's sub-grid (gcd across
-    layers), leftover devices stack along "data"."""
+def net_macro_grid(net_mapping) -> tuple:
+    """(gr, gc) macro sub-grid every layer of a ``NetworkMapping`` can
+    shard onto — the gcd of the per-layer sub-grids (the shape
+    `serving_mesh_for` and the autotuner's mesh candidates build from)."""
     gr = gc = 0
     for m in net_mapping.layers:
         gr = math.gcd(gr, m.sub_grid.r)
         gc = math.gcd(gc, m.sub_grid.c)
-    return make_serving_mesh(max(gr, 1), max(gc, 1), batch,
-                             devices=devices)
+    return max(gr, 1), max(gc, 1)
+
+
+def serving_mesh_for(net_mapping, batch: int, devices=None):
+    """Largest mesh every layer of a ``NetworkMapping`` can shard onto:
+    the mesh macro axes must divide each layer's sub-grid (gcd across
+    layers), leftover devices stack along "data"."""
+    gr, gc = net_macro_grid(net_mapping)
+    return make_serving_mesh(gr, gc, batch, devices=devices)
+
+
+def mesh_split(mesh) -> tuple | None:
+    """Canonical ``(data, row, col)`` device split of a macro/serving
+    mesh (``None`` for the single-device vmap path) — the hashable,
+    picklable form the autotuner searches over and persists
+    (`repro.tune`); :func:`mesh_from_split` rebuilds the live mesh."""
+    if mesh is None:
+        return None
+    shape = dict(mesh.shape)
+    return (int(shape.get("data", 1)), int(shape.get("row", 1)),
+            int(shape.get("col", 1)))
+
+
+def mesh_from_split(split, devices=None):
+    """Live mesh realizing a ``(data, row, col)`` split, or ``None``
+    (vmap path) for ``split=None`` / a degenerate 1x1x1 split / a fleet
+    too small to realize it — a tuned split recorded on a bigger fleet
+    degrades to the single-device path instead of crashing the server."""
+    if split is None:
+        return None
+    data, mr, mc = (int(s) for s in split)
+    if min(data, mr, mc) < 1:
+        raise ValueError(f"mesh split must be >= 1 per axis, got {split}")
+    if data * mr * mc <= 1:
+        return None
+    devices = list(jax.devices() if devices is None else devices)
+    if data * mr * mc > len(devices):
+        return None
+    dev = np.asarray(devices[:data * mr * mc])
+    if data > 1:
+        return jax.sharding.Mesh(dev.reshape(data, mr, mc),
+                                 ("data", "row", "col"))
+    return jax.sharding.Mesh(dev.reshape(mr, mc), ("row", "col"))
+
+
+def mesh_split_candidates(net_mapping, batch: int, devices=None) -> tuple:
+    """Distinct ``(data, row, col)`` splits of a fixed device budget the
+    autotuner measures against each other: for every feasible "data"
+    replica count the largest macro realization of the net's common
+    sub-grid (:func:`net_macro_grid` x `make_macro_mesh`), plus the pure
+    data-parallel split and ``None`` (the single-device vmap path).
+    ``data`` is clamped to ``batch`` — a replica with no batch rows is
+    wasted.  Always contains at least ``None``; on one device that is
+    all there is."""
+    devices = list(jax.devices() if devices is None else devices)
+    gr, gc = net_macro_grid(net_mapping)
+    splits = [None]
+    top_data = max(1, min(len(devices), max(batch, 1)))
+    for data in range(1, top_data + 1):
+        m = make_macro_mesh(gr, gc, devices, data=data)
+        s = mesh_split(m)
+        if s is not None and s not in splits:
+            splits.append(s)
+    pure = (top_data, 1, 1)
+    if pure[0] > 1 and pure not in splits:
+        splits.append(pure)
+    return tuple(splits)
 
 
 def data_axis_size(mesh) -> int:

@@ -108,8 +108,10 @@ class ServeStats:
 
 
 def serve(net_mapping, batch: int, steps: int, warmup: int = 2,
-          mesh=None, seed: int = 0, policy: str = "mapped",
-          donate: Optional[bool] = None) -> ServeStats:
+          mesh=None, seed: int = 0, policy="mapped",
+          donate: Optional[bool] = None,
+          lookahead: Optional[int] = None, block: Optional[str] = None,
+          vmem_budget: Optional[int] = None) -> ServeStats:
     """Steady-state batched forward passes through a compiled plan.
 
     ``batch`` is the *request* batch; when it does not divide the mesh's
@@ -134,7 +136,8 @@ def serve(net_mapping, batch: int, steps: int, warmup: int = 2,
         donate = donation_supported(mesh)
     plan_batch = meshlib.pad_to_data_axis(batch, mesh)
     plan = compile_plan(net_mapping, executor_policy=policy, mesh=mesh,
-                        batch=plan_batch)
+                        batch=plan_batch, lookahead=lookahead,
+                        block=block, vmem_budget=vmem_budget)
 
     rng, ks = _serving_kernels(net_mapping, seed)
     first = net_mapping.layers[0].layer
@@ -185,8 +188,11 @@ def poisson_arrivals(n: int, rate_per_s: float, max_rows: int,
 def serve_dynamic(net_mapping, requests: Sequence[Tuple[float, int]], *,
                   max_batch: int, max_delay_ms: float, mesh=None,
                   tiers: Optional[Sequence[int]] = None,
-                  policy: str = "mapped", warmup: int = 1, seed: int = 0,
+                  policy="mapped", warmup: int = 1, seed: int = 0,
                   donate: Optional[bool] = None,
+                  lookahead: Optional[int] = None,
+                  block: Optional[str] = None,
+                  vmem_budget: Optional[int] = None,
                   clock=time.perf_counter,
                   sleep=time.sleep) -> batching.DynamicServeStats:
     """Arrival-driven serving through the plan ladder.
@@ -222,7 +228,8 @@ def serve_dynamic(net_mapping, requests: Sequence[Tuple[float, int]], *,
     tiers = batching.batch_tiers(max_batch, mesh) if tiers is None \
         else tuple(tiers)
     ladder = batching.PlanLadder(net_mapping, tiers, mesh=mesh,
-                                 policy=policy)
+                                 policy=policy, lookahead=lookahead,
+                                 block=block, vmem_budget=vmem_budget)
     if ladder.max_batch < max_batch:
         raise ValueError(
             f"tiers {ladder.tiers} do not cover max_batch={max_batch} — "
@@ -331,8 +338,18 @@ def main(argv=None) -> None:
                     help="untimed warmup forwards; 0 is honored (timing "
                          "then includes plan compilation)")
     ap.add_argument("--policy", default="mapped",
-                    choices=("mapped", "reference", "sdk", "auto"),
-                    help="plan executor policy (per-layer for 'auto')")
+                    choices=("mapped", "reference", "sdk", "auto",
+                             "tuned"),
+                    help="plan executor policy (per-layer for 'auto'; "
+                         "'tuned' loads the autotuner's persisted "
+                         "winner, falling back to 'auto')")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the measured-feedback autotuner "
+                         "(repro.tune) for this net / fleet / batch "
+                         "profile first — instant with a warm "
+                         "--cache-dir — then serve the winner's full "
+                         "config (policy, mesh split, lookahead, sdk "
+                         "knobs, tiers)")
     ap.add_argument("--cache-dir", default=None,
                     help="persistent mapping/plan cache directory "
                          "(default: $REPRO_MAPPING_CACHE)")
@@ -381,14 +398,31 @@ def main(argv=None) -> None:
         from repro.exec import compile_counts
         max_batch = args.max_batch or args.batch
         max_request = args.max_request or min(4, max_batch)
-        mesh = None if args.no_mesh else serving_mesh_for(mapping, max_batch)
-        tag = meshlib.mesh_tag(mesh) if mesh is not None else "vmap"
         reqs = poisson_arrivals(args.requests, args.arrival_rate,
                                 max_request, seed=args.seed)
+        mesh = None if args.no_mesh else serving_mesh_for(mapping, max_batch)
+        policy, tiers = args.policy, None
+        lookahead = block = vmem_budget = None
+        if args.autotune:
+            from repro import tune
+            res = tune.autotune(mapping, batch=max_batch,
+                                ragged=tuple(r for _, r in reqs),
+                                max_delay_ms=args.max_delay_ms,
+                                seed=args.seed)
+            print(f"autotune: {res.describe()}")
+            cand = res.config.candidate
+            if not args.no_mesh:
+                mesh = meshlib.mesh_from_split(cand.mesh_split)
+            policy, lookahead = cand.policy, cand.lookahead
+            block, vmem_budget = cand.block, cand.vmem_budget
+            tiers = tune.resolve_tiers(cand, max_batch, mesh)
+        tag = meshlib.mesh_tag(mesh) if mesh is not None else "vmap"
         s = serve_dynamic(mapping, reqs, max_batch=max_batch,
                           max_delay_ms=args.max_delay_ms, mesh=mesh,
-                          policy=args.policy, warmup=args.warmup,
-                          seed=args.seed, donate=donate)
+                          tiers=tiers, policy=policy, warmup=args.warmup,
+                          seed=args.seed, donate=donate,
+                          lookahead=lookahead, block=block,
+                          vmem_budget=vmem_budget)
         compiles = sum(compile_counts(net=mapping).values())
         _print_dynamic(args.net, s, tag=tag, max_batch=max_batch,
                        max_delay_ms=args.max_delay_ms, compiles=compiles,
@@ -396,16 +430,30 @@ def main(argv=None) -> None:
         return
 
     mesh = None if args.no_mesh else serving_mesh_for(mapping, args.batch)
+    policy = args.policy
+    lookahead = block = vmem_budget = None
+    if args.autotune:
+        from repro import tune
+        res = tune.autotune(mapping, batch=args.batch, seed=args.seed)
+        print(f"autotune: {res.describe()}")
+        cand = res.config.candidate
+        if not args.no_mesh:
+            mesh = meshlib.mesh_from_split(cand.mesh_split)
+        policy, lookahead = cand.policy, cand.lookahead
+        block, vmem_budget = cand.block, cand.vmem_budget
     tag = meshlib.mesh_tag(mesh) if mesh is not None else "vmap"
     s = serve(mapping, args.batch, args.steps, warmup=args.warmup,
-              mesh=mesh, seed=args.seed, policy=args.policy, donate=donate)
+              mesh=mesh, seed=args.seed, policy=policy, donate=donate,
+              lookahead=lookahead, block=block, vmem_budget=vmem_budget)
     print(s.plan.describe())
     pad_note = (f" ({s.padded_images_per_s:.1f} padded images/s at "
                 f"plan batch {s.plan_batch})"
                 if s.plan_batch != s.request_batch else "")
+    pol_tag = args.policy if isinstance(policy, str) else \
+        "tuned:" + "/".join(sorted(set(policy)))
     print(f"mesh={tag} batch={args.batch}: {s.images_per_s:.1f} images/s"
           f"{pad_note} ({s.s_per_batch*1e3:.1f} ms/batch, "
-          f"executor={args.policy}, warmup_steps={s.warmup_steps}, "
+          f"executor={pol_tag}, warmup_steps={s.warmup_steps}, "
           f"donated={s.donated})")
     print(f"serve/{args.net}/b{args.batch},{s.s_per_batch*1e6:.1f},"
           f"images_per_s={s.images_per_s:.1f};"

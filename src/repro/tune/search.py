@@ -1,0 +1,305 @@
+"""Measured-feedback search driver: seeded successive halving.
+
+`autotune` is the entry point.  Per (net mapping, device fleet, batch
+profile) it:
+
+1. **loads** a persisted winner when one exists (`memo.load_tuning` —
+   a warm disk cache means a cold process adopts the tuned config with
+   ZERO measurements, the acceptance contract of ISSUE 6);
+2. else **enumerates** the joint space (tune/space.py) and **seeds** a
+   shortlist from the analytical cycle model — only the shortlist is
+   ever measured;
+3. **measures** the shortlist against wall-clock with interleaved-round
+   medians (tune/measure.py) under **successive halving**: every stage
+   halves the pool (keeping the best ``1/eta``) and multiplies the
+   per-candidate rounds by ``eta``, so cheap early rounds discard the
+   clearly-bad seeds and the budget concentrates on the contenders.
+   The ``"auto"``-default baseline candidate survives every cut
+   (champion–challenger), so the final stage always measures the winner
+   and the default in the SAME interleaved rounds — the tuned config
+   can tie the default, but never lose to it on its own evidence;
+4. **persists** the winner (`memo.store_tuning`) under the exact batch
+   profile and under the generic (batch=None) slot, so ladder tiers
+   compiled at other batches inherit it.
+
+Both the timer (``clock``) and the per-candidate step builder
+(``runner``) are injectable, which makes the whole search deterministic
+under test: a fake runner that advances a fake clock by scripted
+per-candidate costs must reproduce the halving schedule and the winner
+exactly (tests/test_tune.py).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence, Tuple
+
+from repro.core import memo
+
+from .measure import interleaved_medians
+from .space import (Candidate, TunedConfig, baseline_candidate,
+                    enumerate_space, shortlist)
+
+
+@dataclass(frozen=True)
+class TuneBudget:
+    """Measurement budget of one search.  ``shortlist`` candidates are
+    promoted from the analytical seeding; stage 0 gives each ``rounds``
+    interleaved rounds; every later stage keeps the best
+    ``ceil(pool/eta)`` (plus the baseline) and multiplies rounds by
+    ``eta``, capped at ``max_rounds`` per candidate per stage — so one
+    candidate costs at most ``warmup + rounds + ... + max_rounds``
+    measured steps, and the whole search is bounded up front."""
+
+    shortlist: int = 8
+    rounds: int = 3
+    eta: int = 2
+    max_rounds: int = 12
+    warmup: int = 1
+
+    def __post_init__(self):
+        if self.shortlist < 1 or self.rounds < 1 or self.eta < 2 \
+                or self.max_rounds < self.rounds or self.warmup < 0:
+            raise ValueError(f"malformed budget {self}")
+
+
+#: The tiny budget CI smoke runs use (benchmarks/tune_bench.py --smoke).
+SMOKE_BUDGET = TuneBudget(shortlist=4, rounds=2, eta=2, max_rounds=4,
+                          warmup=1)
+
+
+@dataclass(frozen=True)
+class Trial:
+    """One candidate's median at one halving stage."""
+
+    candidate: Candidate
+    rounds: int
+    median_s: float
+
+
+@dataclass(frozen=True)
+class TuneResult:
+    """What `autotune` returns: the (possibly cached) winner plus the
+    full measured trajectory for reporting (tune/report.py)."""
+
+    config: TunedConfig
+    trials: Tuple[Trial, ...]
+    cached: bool                # loaded from the persistent cache —
+    measurements: int           # ... then this is 0
+    key: Tuple
+
+    def describe(self) -> str:
+        src = "cache" if self.cached else \
+            f"search ({self.measurements} measured steps)"
+        return f"{self.config.describe()} [{src}]"
+
+
+def fleet_signature(devices=None) -> Tuple[str, int]:
+    """(platform, device count) the tuning is valid for — part of the
+    persistence key: a config tuned on 1 CPU core must not leak onto an
+    8-device TPU fleet."""
+    import jax
+    devices = list(jax.devices() if devices is None else devices)
+    plats = sorted({getattr(d, "platform", "unknown") for d in devices})
+    return ("+".join(plats), len(devices))
+
+
+def tuning_key(net, fleet: Tuple[str, int], batch: Optional[int],
+               ragged: Optional[Tuple[int, ...]] = None) -> Tuple:
+    """The persistence key: (net mapping, device fleet, batch profile).
+    ``ragged`` distinguishes a dynamic-serving profile (the request-size
+    stream tuned against) from the fixed-batch one."""
+    return (net, fleet, batch, ragged)
+
+
+def tuned_config(net, *, batch: Optional[int] = None, devices=None,
+                 ragged: Optional[Tuple[int, ...]] = None
+                 ) -> Optional[TunedConfig]:
+    """Peek the persisted winner for this (net, fleet, batch) — exact
+    batch first, then the generic slot a search also stores under — or
+    ``None`` when nothing was ever tuned (callers fall back to
+    ``"auto"``; `compile_plan(executor_policy="tuned")` does exactly
+    that)."""
+    fleet = fleet_signature(devices)
+    slots = (batch, None) if batch is not None else (None,)
+    for b in slots:
+        cfg = memo.load_tuning(tuning_key(net, fleet, b, ragged))
+        if cfg is not None:
+            return cfg
+    return None
+
+
+def _chains(net) -> bool:
+    """Whether the net compiles as a chain (execute_plan) or only as a
+    layer set (execute_layerwise) — inception's spec list is a
+    representative set, not a chain."""
+    from repro.exec.glue import resolve_chain
+    carry = net.layers[0].layer.ic
+    try:
+        for a, b in zip(net.layers, net.layers[1:]):
+            resolve_chain(a.layer.name, a.layer.oc, carry,
+                          b.layer.name, b.layer.ic)
+            carry = b.layer.ic
+        return True
+    except ValueError:
+        return False
+
+
+def resolve_tiers(cand: Candidate, max_batch: int, mesh):
+    """The candidate's tier ladder made valid for ITS mesh: every tier
+    padded to the data axis (tiers were proposed mesh-agnostically) and
+    the top tier covering ``max_batch``."""
+    from repro.launch import batching, mesh as meshlib
+    if cand.tiers is None:
+        return batching.batch_tiers(max_batch, mesh)
+    tiers = sorted({meshlib.pad_to_data_axis(int(t), mesh)
+                    for t in cand.tiers})
+    top = meshlib.pad_to_data_axis(max_batch, mesh)
+    if not tiers or tiers[-1] < top:
+        tiers.append(top)
+    return tuple(tiers)
+
+
+def default_runner(net, *, batch: int, devices=None,
+                   ragged: Optional[Tuple[int, ...]] = None,
+                   max_delay_ms: float = 0.5,
+                   seed: int = 0) -> Callable[[Candidate], Callable]:
+    """Build the measured step for a candidate.
+
+    Fixed profile (``ragged=None``): one steady-state `execute_plan`
+    forward at the candidate's padded plan batch (`execute_layerwise`
+    for nets that do not chain).  Ragged profile: one backlogged
+    `serve_dynamic` drain of the ``ragged`` request sizes through the
+    candidate's tier ladder — the coalescer/ladder policy is then part
+    of what is measured.  Compilation happens on the warmup call the
+    measurement harness issues, so timed rounds see the steady state.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.exec import compile_plan, execute_layerwise, execute_plan
+    from repro.launch import mesh as meshlib, serve_cnn
+
+    chained = _chains(net)
+    rng, ks = serve_cnn._serving_kernels(net, seed)
+    first = net.layers[0].layer
+
+    def build(cand: Candidate) -> Callable[[], None]:
+        mesh = meshlib.mesh_from_split(cand.mesh_split, devices)
+        if ragged is not None and chained:
+            reqs = tuple((0.0, int(r)) for r in ragged)
+            tiers = resolve_tiers(cand, batch, mesh)
+
+            def step():
+                serve_cnn.serve_dynamic(
+                    net, reqs, max_batch=batch,
+                    max_delay_ms=max_delay_ms, mesh=mesh, tiers=tiers,
+                    policy=cand.policy, warmup=0, seed=seed,
+                    lookahead=cand.lookahead, block=cand.block,
+                    vmem_budget=cand.vmem_budget)
+            return step
+
+        plan_batch = meshlib.pad_to_data_axis(batch, mesh)
+        plan = compile_plan(net, executor_policy=cand.policy, mesh=mesh,
+                            batch=plan_batch, chained=chained,
+                            lookahead=cand.lookahead, block=cand.block,
+                            vmem_budget=cand.vmem_budget)
+        if chained:
+            x = jnp.asarray(rng.randn(plan_batch, first.ic, first.i_h,
+                                      first.i_w), jnp.float32)
+
+            def step():
+                jax.block_until_ready(
+                    execute_plan(plan, ks, x, mesh=mesh))
+            return step
+
+        xs = tuple(jnp.asarray(
+            rng.randn(plan_batch, m.layer.ic, m.layer.i_h, m.layer.i_w),
+            jnp.float32) for m in net.layers)
+
+        def step():
+            jax.block_until_ready(
+                execute_layerwise(plan, ks, xs, mesh=mesh))
+        return step
+
+    return build
+
+
+def autotune(net, *, batch: int, devices=None,
+             space: Optional[Sequence[Candidate]] = None,
+             baseline: Optional[Candidate] = None,
+             budget: Optional[TuneBudget] = None,
+             clock: Callable[[], float] = time.perf_counter,
+             runner: Optional[Callable[[Candidate], Callable]] = None,
+             ragged: Optional[Tuple[int, ...]] = None,
+             max_delay_ms: float = 0.5, seed: int = 0,
+             force: bool = False, store: bool = True) -> TuneResult:
+    """Find (or load) the fastest measured configuration of ``net`` for
+    this device fleet and batch profile — see the module docstring for
+    the search shape.  ``force=True`` re-measures even with a persisted
+    winner; ``store=False`` skips persisting (exploratory sweeps)."""
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    budget = budget or TuneBudget()
+    fleet = fleet_signature(devices)
+    ragged = tuple(int(r) for r in ragged) if ragged is not None else None
+    key = tuning_key(net, fleet, batch, ragged)
+    if not force:
+        cfg = memo.load_tuning(key)
+        if cfg is not None:
+            return TuneResult(config=cfg, trials=(), cached=True,
+                              measurements=0, key=key)
+
+    if baseline is None:
+        baseline = baseline_candidate(net, batch=batch, devices=devices)
+    if space is None:
+        tiers_options = ((None, (batch,)) if ragged is not None
+                         else (None,))
+        space = enumerate_space(net, batch=batch, devices=devices,
+                                tiers_options=tiers_options)
+    short = shortlist(net, space, budget.shortlist, baseline=baseline)
+
+    if runner is None:
+        runner = default_runner(net, batch=batch, devices=devices,
+                                ragged=ragged,
+                                max_delay_ms=max_delay_ms, seed=seed)
+    measured = 0
+
+    def counted(step):
+        def run():
+            nonlocal measured
+            measured += 1
+            step()
+        return run
+
+    steps = {c: counted(runner(c)) for c in short}
+
+    pool = list(short)
+    rounds = budget.rounds
+    trials = []
+    while True:
+        meds = interleaved_medians([steps[c] for c in pool],
+                                   rounds=rounds, clock=clock,
+                                   warmup=budget.warmup)
+        trials.extend(Trial(c, rounds, m) for c, m in zip(pool, meds))
+        if len(pool) <= 2 or rounds >= budget.max_rounds:
+            break
+        keep = max(1, math.ceil(len(pool) / budget.eta))
+        order = sorted(range(len(pool)), key=meds.__getitem__)
+        pool = [pool[i] for i in order[:keep]]
+        if baseline not in pool:        # the champion survives every cut
+            pool.append(baseline)
+        rounds = min(rounds * budget.eta, budget.max_rounds)
+
+    win_i = min(range(len(pool)), key=meds.__getitem__)
+    cfg = TunedConfig(candidate=pool[win_i], median_s=meds[win_i],
+                      baseline_s=meds[pool.index(baseline)],
+                      rounds=rounds, measurements=measured, fleet=fleet,
+                      batch=batch)
+    if store:
+        memo.store_tuning(key, cfg)
+        # the generic slot: ladder tiers compiled at other batches (and
+        # `tuned_config(batch=None)` callers) inherit the newest tuning
+        memo.store_tuning(tuning_key(net, fleet, None, ragged), cfg)
+    return TuneResult(config=cfg, trials=tuple(trials), cached=False,
+                      measurements=measured, key=key)

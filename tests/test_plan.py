@@ -272,3 +272,69 @@ print("PLAN-SHARDED-OK")
     out = subprocess.run([sys.executable, "-c", code], env=env,
                          capture_output=True, text=True, timeout=600)
     assert "PLAN-SHARDED-OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_plan_lookahead_field_recompiles_once():
+    """ISSUE 6 satellite: lookahead is a compiled-plan field (formerly
+    the module constant exec.run._LOOKAHEAD).  Each distinct value is a
+    distinct plan (own cache key) and retraces the fused program exactly
+    once — replays hit the jit cache — and every depth computes the
+    same forward."""
+    from repro.exec import run as exec_run
+    # a (layers, grid) combination no other test executes fused, so the
+    # jit cache holds no prior trace of these plans
+    net = _net("cnn8", networks.cnn8()[:2], grid=MacroGrid(1, 1),
+               groups=(1,))
+    ks, x = _data(net, batch=3)
+    plans = {la: compile_plan(net, executor_policy="reference",
+                              lookahead=la) for la in (0, 1, 2)}
+    for la, p in plans.items():
+        assert p.lookahead == la
+        assert f"lookahead={la}" in p.describe()
+    assert len({id(p) for p in plans.values()}) == 3   # distinct keys
+    base = exec_run.fused_trace_count
+    ys = []
+    for p in plans.values():
+        y0 = execute_plan(p, ks, x)
+        y1 = execute_plan(p, ks, x)          # replay: no retrace
+        assert bool(jnp.all(y0 == y1))
+        ys.append(y0)
+    assert exec_run.fused_trace_count == base + 3  # one per depth
+    for y in ys[1:]:                 # fences reorder nothing observable
+        assert bool(jnp.all(y == ys[0]))
+    # default plans keep lookahead=1 and memoize as before
+    assert compile_plan(net, executor_policy="reference").lookahead == 1
+    assert compile_plan(net, executor_policy="reference",
+                        lookahead=1) is \
+        compile_plan(net, executor_policy="reference")
+    with pytest.raises(ValueError, match="lookahead"):
+        compile_plan(net, executor_policy="reference", lookahead=-1)
+
+
+def test_plan_vmem_budget_param_and_env(monkeypatch):
+    """ISSUE 6 satellite: the sdk block="auto" VMEM budget is an
+    explicit byte parameter with the REPRO_SDK_VMEM_BUDGET env var as
+    the deploy-time default — resolved at compile, recorded in the IR,
+    and part of the plan cache key."""
+    from repro.kernels.im2win_conv import (DEFAULT_VMEM_BUDGET,
+                                           default_vmem_budget)
+    net = _net()
+    monkeypatch.delenv("REPRO_SDK_VMEM_BUDGET", raising=False)
+    assert default_vmem_budget() == DEFAULT_VMEM_BUDGET
+    p_def = compile_plan(net, executor_policy="mapped")
+    assert all(lp.vmem_budget == DEFAULT_VMEM_BUDGET for lp in p_def.layers)
+    p_exp = compile_plan(net, executor_policy="mapped",
+                         vmem_budget=1 << 20)
+    assert all(lp.vmem_budget == 1 << 20 for lp in p_exp.layers)
+    assert p_exp is not p_def                # distinct cache key
+    # env default: None resolves through the env var, landing on the
+    # SAME cache key as the explicit byte count
+    monkeypatch.setenv("REPRO_SDK_VMEM_BUDGET", str(1 << 20))
+    assert default_vmem_budget() == 1 << 20
+    assert compile_plan(net, executor_policy="mapped") is p_exp
+    monkeypatch.setenv("REPRO_SDK_VMEM_BUDGET", "8M")
+    with pytest.raises(ValueError, match="not an integer"):
+        default_vmem_budget()
+    monkeypatch.setenv("REPRO_SDK_VMEM_BUDGET", "-4")
+    with pytest.raises(ValueError, match="must be > 0"):
+        default_vmem_budget()
