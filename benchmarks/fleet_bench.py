@@ -1,0 +1,119 @@
+"""Shared-fleet vs dedicated-slice serving on the SAME mixed stream.
+
+The ISSUE 7 acceptance row: one `launch/fleet.FleetScheduler` serving a
+mixed cnn8+inception+densenet40 Poisson stream must achieve at least
+the aggregate effective images/s of serving each model alone on a
+dedicated fleet slice.  Both paths face an identical tagged trace:
+
+* ``shared``    — `fleet.serve_fleet`: per-model coalescers + plan
+  ladders behind the cross-model drain policy, one serving span — a
+  model's idle arrival gaps are filled with the other models' work;
+* ``dedicated`` — each model's sub-trace (absolute arrival times
+  preserved) replayed alone through `serve_cnn.serve_dynamic`; the
+  slices run independently, so the baseline's wall is the SUM of the
+  per-slice walls — each slice still waits out its own arrival span,
+  which is the whole trace's span.
+
+Rounds are interleaved (plan_bench-style) so machine noise hits both
+paths equally; medians are reported.  Per-model and aggregate SLO
+attainment come from the shared run.  Layer SLICES of the three nets
+keep CPU compile time in check (densenet40's full 38-layer program
+compiles for minutes); the scheduling comparison is unchanged.
+
+    python -m benchmarks.fleet_bench --smoke
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import ArrayConfig, MacroGrid, map_net, networks
+from repro.launch import fleet, serve_cnn
+
+from .common import Row, interleaved_rounds, median
+
+NETS = ("cnn8", "inception", "densenet40")
+SLICES = {"cnn8": 3, "inception": 2, "densenet40": 4}
+MAX_BATCH = 4
+MAX_DELAY_MS = 2.0
+SLO_MS = 100.0
+RATE_PER_S = 150.0
+ROUNDS = 3
+
+
+def _mappings():
+    out = {}
+    for name in NETS:
+        layers = networks.NETWORKS[name]()[:SLICES[name]]
+        out[name] = fleet.chainable_prefix(map_net(
+            name, layers, ArrayConfig(64, 64), "TetrisG-SDK",
+            MacroGrid(2, 2), groups=(1, 2)))
+    return out
+
+
+def run(full: bool = False):
+    n_requests = 60 if full else 24
+    mappings = _mappings()
+    config = fleet.FleetConfig(models=tuple(
+        fleet.ModelSpec(n, max_batch=MAX_BATCH,
+                        max_delay_s=MAX_DELAY_MS / 1e3, slo_ms=SLO_MS)
+        for n in NETS))
+    trace = fleet.mixed_poisson_trace(NETS, n_requests, RATE_PER_S,
+                                      MAX_BATCH, seed=0)
+
+    def shared_round():
+        stats, _ = fleet.serve_fleet(mappings, config, trace, warmup=1)
+        return (stats.images_per_s, stats.padded_images_per_s,
+                stats.slo_attainment,
+                {n: m.slo_attainment for n, m in stats.models.items()})
+
+    def dedicated_round():
+        # each slice serves ONLY its model but still spans the whole
+        # trace (absolute arrival times preserved); slices are
+        # independent, so the baseline wall is the sum
+        images = padded = wall = 0.0
+        for name in NETS:
+            sub = tuple((t, r) for t, m, r in trace if m == name)
+            s = serve_cnn.serve_dynamic(
+                mappings[name], sub, max_batch=MAX_BATCH,
+                max_delay_ms=MAX_DELAY_MS, warmup=1)
+            images += s.request_images
+            padded += s.padded_images
+            wall += s.wall_s
+        return images / wall, padded / wall
+
+    outs = interleaved_rounds([shared_round, dedicated_round], ROUNDS,
+                              warmup=1)
+    sh_eff = median([o[0] for o in outs[0]])
+    sh_pad = median([o[1] for o in outs[0]])
+    sh_slo = median([o[2] for o in outs[0]])
+    per_model = outs[0][len(outs[0]) // 2][3]     # the median round's
+    de_eff = median([o[0] for o in outs[1]])
+    de_pad = median([o[1] for o in outs[1]])
+    slo_tag = "/".join(f"{n}:{per_model[n]:.3f}" for n in NETS)
+    return [
+        Row("fleet/dedicated", 1e6 / de_eff,
+            f"images_per_s={de_eff:.1f};padded_images_per_s={de_pad:.1f};"
+            f"models={'/'.join(NETS)};requests={n_requests}"),
+        Row("fleet/shared", 1e6 / sh_eff,
+            f"images_per_s={sh_eff:.1f};padded_images_per_s={sh_pad:.1f};"
+            f"speedup={sh_eff / de_eff:.2f};"
+            f"slo_attainment={sh_slo:.3f};per_model_slo={slo_tag};"
+            f"max_batch={MAX_BATCH};max_delay_ms={MAX_DELAY_MS};"
+            f"slo_ms={SLO_MS}"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace (the acceptance smoke)")
+    ap.add_argument("--full", action="store_true",
+                    help="longer trace / more rounds")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(full=args.full and not args.smoke):
+        print(row.csv(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

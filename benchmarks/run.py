@@ -9,14 +9,14 @@ from __future__ import annotations
 import argparse
 
 from . import (fig14_speedup, fig15_grouped_speedup, fig17_18_system,
-               fig19_ablation, fig20_macro_parallel, kernels_bench,
-               mobilenet_depthwise, plan_bench, search_bench, serve_bench,
-               table1_mapping, table2_grouped)
+               fig19_ablation, fig20_macro_parallel, fleet_bench,
+               kernels_bench, mobilenet_depthwise, plan_bench,
+               search_bench, serve_bench, table1_mapping, table2_grouped)
 
 MODULES = [table1_mapping, table2_grouped, fig14_speedup,
            fig15_grouped_speedup, fig17_18_system, fig19_ablation,
            fig20_macro_parallel, mobilenet_depthwise, kernels_bench,
-           plan_bench, search_bench, serve_bench]
+           plan_bench, search_bench, serve_bench, fleet_bench]
 
 
 def main() -> None:

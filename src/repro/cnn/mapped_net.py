@@ -44,7 +44,7 @@ from __future__ import annotations
 import functools
 import math
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -189,48 +189,126 @@ def _macro_step(p_blk: jnp.ndarray, w_blk: jnp.ndarray,
 # Layer executor
 # ---------------------------------------------------------------------------
 
-def _tile_operands(mapping: LayerMapping, tile: TileMapping,
-                   xc: jnp.ndarray, ks: jnp.ndarray,
-                   R: int, C: int) -> List[dict]:
-    """Pass-blocked operands per congruent window shape.
+def _tile_dims(mapping: LayerMapping, tile: TileMapping
+               ) -> Tuple[int, int, int, int]:
+    """(R, C, ic_pad, oc_pad) of one tile's super-step blocking — the
+    sequential channel/oc super-step counts and the channel paddings
+    that make every super-step a full (sub_r x sub_c) macro block."""
+    sub = mapping.sub_grid
+    ic_t, ar_c, oc_t, ac_c = mapping.tile_passes(tile)
+    R = math.ceil(ar_c / sub.r)
+    C = math.ceil(ac_c / sub.c)
+    return R, C, R * sub.r * ic_t, C * sub.c * oc_t
 
-    xc (b, g, ic_pad, H, W) and ks (k_h, k_w, ic_pad, g, oc_pad) are the
-    tile's channel slice zero-padded to whole super-steps.  For each
-    shape: patches (R, sub_r, b, g, N, K) with K = ic_t*ph*pw, and
-    weights (R, C, sub_r, sub_c, g, K, npos*oc_t) — the row/oc blocking
-    of the Fig 5 shifted-and-duplicated matrix.
-    """
+
+def _tile_weights(mapping: LayerMapping, tile: TileMapping,
+                  ks: jnp.ndarray, R: int, C: int) -> Tuple[jnp.ndarray, ...]:
+    """Blocked shifted-weight matrices, one per congruent window shape:
+    (R, C, sub_r, sub_c, g, K, npos*oc_t) — the row/oc blocking of the
+    Fig 5 shifted-and-duplicated matrix.  Input- and batch-independent:
+    co-resident plan tiers can share ONE prepared copy
+    (`prepared_layer_weights` / repro.exec.constants)."""
     layer = mapping.layer
     s = layer.stride
     sub = mapping.sub_grid
     ic_t, _, oc_t, _ = mapping.tile_passes(tile)
-    b, g = xc.shape[0], xc.shape[1]
-    ic_pad, oc_pad = xc.shape[2], ks.shape[4]
+    g = ks.shape[3]
+    ic_pad, oc_pad = ks.shape[2], ks.shape[4]
     out = []
-    for (ph, pw), origins in placement_groups(layer, tile).items():
+    for (ph, pw), _origins in placement_groups(layer, tile).items():
         py = (ph - layer.k_h) // s + 1
         px = (pw - layer.k_w) // s + 1
         npos = py * px
         K = ic_t * ph * pw
-        flat = gather_patches(xc, origins, ph, pw)     # (b,g,N,ic_pad*ph*pw)
-        n = flat.shape[2]
-        p_all = flat.reshape(b, g, n, R * sub.r, K)
-        p_all = p_all.transpose(3, 0, 1, 2, 4).reshape(
-            R, sub.r, b, g, n, K)
         Wm = build_weight_matrix(
             layer, ks.reshape(layer.k_h, layer.k_w, ic_pad, g * oc_pad),
             ph, pw)                                    # (ic_pad*ph*pw, ...)
         w_all = Wm.reshape(R, sub.r, K, npos, g, C, sub.c, oc_t)
         w_all = w_all.transpose(0, 5, 1, 6, 4, 2, 3, 7).reshape(
             R, C, sub.r, sub.c, g, K, npos * oc_t)
+        out.append(w_all)
+    return tuple(out)
+
+
+def _tile_operands(mapping: LayerMapping, tile: TileMapping,
+                   xc: jnp.ndarray, ks: Optional[jnp.ndarray],
+                   R: int, C: int,
+                   prepared: Optional[Sequence[jnp.ndarray]] = None
+                   ) -> List[dict]:
+    """Pass-blocked operands per congruent window shape.
+
+    xc (b, g, ic_pad, H, W) and ks (k_h, k_w, ic_pad, g, oc_pad) are the
+    tile's channel slice zero-padded to whole super-steps.  For each
+    shape: patches (R, sub_r, b, g, N, K) with K = ic_t*ph*pw, and
+    weights (R, C, sub_r, sub_c, g, K, npos*oc_t) — the row/oc blocking
+    of the Fig 5 shifted-and-duplicated matrix.  ``prepared`` substitutes
+    pre-materialized weight blocks (`_tile_weights` order) for the
+    in-trace build — the plan-constant sharing path; ``ks`` may then be
+    None.
+    """
+    layer = mapping.layer
+    s = layer.stride
+    sub = mapping.sub_grid
+    ic_t, _, _, _ = mapping.tile_passes(tile)
+    b, g = xc.shape[0], xc.shape[1]
+    if prepared is None:
+        weights = _tile_weights(mapping, tile, ks, R, C)
+    else:
+        weights = tuple(prepared)
+    groups = placement_groups(layer, tile)
+    if len(weights) != len(groups):
+        raise ValueError(f"{layer.name}: {len(weights)} prepared weight "
+                         f"blocks for {len(groups)} window shapes")
+    out = []
+    for (ph, pw), origins in groups.items():
+        py = (ph - layer.k_h) // s + 1
+        px = (pw - layer.k_w) // s + 1
+        K = ic_t * ph * pw
+        flat = gather_patches(xc, origins, ph, pw)     # (b,g,N,ic_pad*ph*pw)
+        n = flat.shape[2]
+        p_all = flat.reshape(b, g, n, R * sub.r, K)
+        p_all = p_all.transpose(3, 0, 1, 2, 4).reshape(
+            R, sub.r, b, g, n, K)
         OY, OX = scatter_indices(origins, py, px, s)
-        out.append(dict(p_all=p_all, w_all=w_all, OY=OY, OX=OX,
+        out.append(dict(p_all=p_all, w_all=weights[len(out)], OY=OY, OX=OX,
                         py=py, px=px))
     return out
 
 
+def prepared_layer_weights(mapping: LayerMapping, kernel: jnp.ndarray
+                           ) -> Tuple[Tuple[jnp.ndarray, ...], ...]:
+    """Materialize one layer's blocked shifted-weight matrices from its
+    kernel — per tile, per congruent window shape, in exactly the order
+    :func:`mapped_conv2d_traced` consumes them via ``weights=``.
+
+    The blocks depend only on (mapping, kernel), never on the input or
+    the batch, so every tier of a plan ladder — and every co-resident
+    plan of the same network — can share ONE prepared copy instead of
+    re-deriving the matrices inside each tier's program on every forward
+    (repro.exec.constants.prepare_constants owns the sharing handle)."""
+    layer = mapping.layer
+    g = mapping.group
+    ic_g, oc_g = layer.ic // g, layer.oc // g
+    if kernel.shape != (layer.k_h, layer.k_w, ic_g, layer.oc):
+        raise ValueError(f"kernel shape {kernel.shape} != grouped layout "
+                         f"{(layer.k_h, layer.k_w, ic_g, layer.oc)}")
+    kr = kernel.reshape(layer.k_h, layer.k_w, ic_g, g, oc_g)
+    out = []
+    c_base = 0
+    for tile in mapping.tiles:
+        kept = tile.depth
+        R, C, ic_pad, oc_pad = _tile_dims(mapping, tile)
+        ks = jnp.pad(kr[:, :, c_base:c_base + kept],
+                     ((0, 0), (0, 0), (0, ic_pad - kept), (0, 0),
+                      (0, oc_pad - oc_g)))
+        out.append(_tile_weights(mapping, tile, ks, R, C))
+        c_base += kept + tile.pruned_channels
+    return tuple(out)
+
+
 def mapped_conv2d_traced(mapping: LayerMapping, x: jnp.ndarray,
-                         kernel: jnp.ndarray, *, mesh=None) -> jnp.ndarray:
+                         kernel: Optional[jnp.ndarray], *, mesh=None,
+                         weights=None) -> jnp.ndarray:
     """Macro-parallel convolution per the mapping — the trace-time body.
     Public plan-consuming entry: `repro.exec.run` inlines it into the
     whole-network program; stand-alone callers use :func:`mapped_conv2d`
@@ -238,37 +316,53 @@ def mapped_conv2d_traced(mapping: LayerMapping, x: jnp.ndarray,
     cnn.cim_conv.cim_conv2d: x (batch, ic, i_h, i_w) pre-padded, kernel
     (k_h, k_w, ic // G, oc) in lax grouped layout, output
     (batch, oc, o_h, o_w); pruned channels (the trailing slice of each
-    tile's channel range) are skipped."""
+    tile's channel range) are skipped.  ``weights`` substitutes this
+    layer's pre-materialized shifted-weight blocks
+    (:func:`prepared_layer_weights`) for the in-trace build — the
+    plan-constant sharing path; ``kernel`` is then only consulted for
+    the result dtype (and may be None)."""
     layer = mapping.layer
     b = x.shape[0]
     o_h, o_w = layer.o_h, layer.o_w
     g = mapping.group
     ic_g, oc_g = layer.ic // g, layer.oc // g
-    if kernel.shape != (layer.k_h, layer.k_w, ic_g, layer.oc):
-        raise ValueError(f"kernel shape {kernel.shape} != grouped layout "
-                         f"{(layer.k_h, layer.k_w, ic_g, layer.oc)}")
+    if weights is None:
+        if kernel.shape != (layer.k_h, layer.k_w, ic_g, layer.oc):
+            raise ValueError(f"kernel shape {kernel.shape} != grouped "
+                             f"layout "
+                             f"{(layer.k_h, layer.k_w, ic_g, layer.oc)}")
+        kr = kernel.reshape(layer.k_h, layer.k_w, ic_g, g, oc_g)
+        w_dtype = kernel.dtype
+    else:
+        if len(weights) != len(mapping.tiles):
+            raise ValueError(f"{layer.name}: {len(weights)} prepared "
+                             f"weight tiles for {len(mapping.tiles)}")
+        kr = None
+        w_dtype = weights[0][0].dtype
 
-    sub = mapping.sub_grid
     # all groups are congruent: the group axis batches the gr*gc-parallel
     # groups; sequential group rounds only multiply the step count
     xr = x.reshape(b, g, ic_g, layer.i_h, layer.i_w)
-    kr = kernel.reshape(layer.k_h, layer.k_w, ic_g, g, oc_g)
-    out = jnp.zeros((b, g, oc_g, o_h, o_w), jnp.result_type(x, kernel))
+    out = jnp.zeros((b, g, oc_g, o_h, o_w), jnp.result_type(x.dtype,
+                                                            w_dtype))
 
+    sub = mapping.sub_grid
     c_base = 0
-    for tile in mapping.tiles:
+    for ti, tile in enumerate(mapping.tiles):
         kept = tile.depth
-        ic_t, ar_c, oc_t, ac_c = mapping.tile_passes(tile)
-        R = math.ceil(ar_c / sub.r)          # sequential channel super-steps
-        C = math.ceil(ac_c / sub.c)          # sequential oc super-steps
-        ic_pad = R * sub.r * ic_t            # idle macros = zero passes
-        oc_pad = C * sub.c * oc_t
+        oc_t = mapping.tile_passes(tile)[2]
+        R, C, ic_pad, oc_pad = _tile_dims(mapping, tile)
         xc = jnp.pad(xr[:, :, c_base:c_base + kept],
                      ((0, 0), (0, 0), (0, ic_pad - kept), (0, 0), (0, 0)))
-        ks = jnp.pad(kr[:, :, c_base:c_base + kept],
-                     ((0, 0), (0, 0), (0, ic_pad - kept), (0, 0),
-                      (0, oc_pad - oc_g)))
-        shapes = _tile_operands(mapping, tile, xc, ks, R, C)
+        if weights is None:
+            ks = jnp.pad(kr[:, :, c_base:c_base + kept],
+                         ((0, 0), (0, 0), (0, ic_pad - kept), (0, 0),
+                          (0, oc_pad - oc_g)))
+        else:
+            ks = None
+        shapes = _tile_operands(mapping, tile, xc, ks, R, C,
+                                prepared=None if weights is None
+                                else weights[ti])
 
         acc = jnp.zeros((b, g, oc_pad, o_h, o_w), out.dtype)
         soc = sub.c * oc_t                   # oc columns per super-step

@@ -35,6 +35,12 @@ shape, batch) under their own :data:`PLAN_VERSION` — a serving replica
 with a warm disk cache skips both the window search *and* plan
 compilation.
 
+Prepared plan constants (:mod:`repro.exec.constants` — the shifted-weight
+device buffers co-resident plan tiers share) get their own small
+in-memory-only handle cache via :func:`cached_constants`, keyed on the
+net mapping: device buffers never touch the disk layer, and a fleet
+serving several models materializes each network's constants once.
+
 Autotuner winners (:mod:`repro.tune`) persist through
 :func:`load_tuning` / :func:`store_tuning`, keyed on (net mapping,
 device-fleet signature, batch profile) under :data:`TUNE_VERSION`.
@@ -78,6 +84,7 @@ from .types import MacroGrid
 
 _results: "OrderedDict[Any, Any]" = OrderedDict()
 _tables: "OrderedDict[Any, Any]" = OrderedDict()
+_constants: "OrderedDict[Any, Any]" = OrderedDict()
 _enabled: bool = True
 _aux_clears: list = []
 
@@ -87,6 +94,10 @@ _aux_clears: list = []
 # serving process; tables are per-(layer, array) and much heavier.
 _result_limit: int = 16384
 _table_limit: int = 256
+# shared-constants handles hold live DEVICE buffers (prepared
+# shifted-weight blocks, repro.exec.constants) — a handful of co-resident
+# networks, never a sweep's worth of entries
+_constants_limit: int = 16
 
 #: Bump whenever search semantics or the LayerMapping schema change —
 #: on-disk entries written under another version never match again.
@@ -110,6 +121,7 @@ _disk_max_bytes: Any = _UNSET  # _UNSET -> resolve from env on first use
 
 stats = {"result_hits": 0, "result_misses": 0, "result_evictions": 0,
          "table_hits": 0, "table_misses": 0, "table_evictions": 0,
+         "const_hits": 0, "const_misses": 0, "const_evictions": 0,
          "disk_hits": 0, "disk_misses": 0, "disk_writes": 0,
          "disk_evictions": 0, "disk_errors": 0}
 
@@ -153,6 +165,7 @@ def clear() -> None:
     """Reset the in-memory caches and counters (not the disk layer)."""
     _results.clear()
     _tables.clear()
+    _constants.clear()
     for fn in _aux_clears:
         fn()
     for k in stats:
@@ -395,6 +408,28 @@ def cached_plan(key: Tuple, compute: Callable[[], Any]) -> Any:
     :data:`PLAN_VERSION`."""
     return cached_result(("plan", PLAN_VERSION) + key, compute,
                          persist=True)
+
+
+def cached_constants(key: Tuple, compute: Callable[[], Any]) -> Any:
+    """Shared-constants handle cache (repro.exec.constants, ISSUE 7):
+    prepared plan constants — the shifted-weight device buffers every
+    tier of a plan ladder shares — keyed on the net mapping (plus the
+    resolved executors and the caller's kernel token).  In-memory ONLY:
+    the values are live device buffers, which have no business in the
+    pickled disk layer; a cold process re-materializes them once per
+    network (cheap next to plan compilation).  Bounded by its own small
+    LRU (`_constants_limit`): a handful of co-resident networks is the
+    design point, and each handle can hold a whole network's weights."""
+    if not _enabled:
+        return compute()
+    try:
+        return _lru_get(_constants, key, "const_hits")
+    except KeyError:
+        pass
+    stats["const_misses"] += 1
+    out = compute()
+    _lru_put(_constants, key, out, _constants_limit, "const_evictions")
+    return out
 
 
 def _tune_key(key: Tuple) -> Tuple:

@@ -11,6 +11,7 @@ DESIGN.md §8 and the module docstrings of exec/plan.py / exec/run.py.
                         mesh=mesh, batch=8)
     y = execute_plan(plan, kernels, x, mesh=mesh)
 """
+from .constants import PlanConstants, constant_counts, prepare_constants
 from .glue import GLUE_KINDS, center_crop, fit_spatial, resolve_chain
 from .plan import (EXECUTORS, LayerPlan, NetworkPlan, PolicyLike,
                    compile_counts, compile_plan)
@@ -18,8 +19,10 @@ from .run import (apply_layer, donation_supported, execute_layerwise,
                   execute_looped, execute_oracle, execute_plan)
 
 __all__ = [
-    "GLUE_KINDS", "EXECUTORS", "LayerPlan", "NetworkPlan", "PolicyLike",
-    "apply_layer", "center_crop", "compile_counts", "compile_plan",
+    "GLUE_KINDS", "EXECUTORS", "LayerPlan", "NetworkPlan",
+    "PlanConstants", "PolicyLike", "apply_layer", "center_crop",
+    "compile_counts", "compile_plan", "constant_counts",
     "donation_supported", "execute_layerwise", "execute_looped",
-    "execute_oracle", "execute_plan", "fit_spatial", "resolve_chain",
+    "execute_oracle", "execute_plan", "fit_spatial", "prepare_constants",
+    "resolve_chain",
 ]

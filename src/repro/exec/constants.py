@@ -1,0 +1,126 @@
+"""Shared plan constants: prepared shifted-weight buffers across tiers.
+
+Every tier of a plan ladder — and, in fleet serving
+(launch/fleet.py), every co-resident plan of the same network —
+executes the SAME ``NetworkMapping``.  Yet each tier's fused program
+re-derives the identical shifted-and-duplicated weight matrices
+(`cnn/mapped_net._tile_weights`, the Fig 5 blocks) from the raw kernels
+on every forward: the prep is batch-independent, so a three-tier ladder
+pays for it three programs over, once per forward each.
+
+:func:`prepare_constants` materializes those blocks ONCE per network —
+per tile, per congruent window shape, for every layer the plan
+dispatches to the ``"mapped"`` executor — into a :class:`PlanConstants`
+handle, memoized through ``core/memo.cached_constants`` keyed on the net
+mapping (plus resolved executors and the caller's kernel token).
+``execute_plan(constants=...)`` then feeds the blocks to any tier of any
+co-resident ladder of that network as ordinary program inputs: the
+in-trace weight prep disappears from every tier's forward, and all tiers
+share one device copy instead of duplicating it per tier.
+
+The blocks arrive as program *inputs*, so the cross-layer lookahead
+fence in exec/run.py deliberately does not thread them: hoisting an
+already-materialized buffer costs nothing — the fence exists to stop
+XLA from computing every layer's prep up front, and with constants there
+is no in-program prep left to hoist.
+
+``constant_counts`` mirrors ``exec/plan.compile_counts``: actual
+materializations per cache key (hits do NOT count), the evidence the
+fleet tests use to assert constants materialize once per network, not
+once per tier (tests/test_fleet.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+from repro.core import memo
+from repro.core.types import NetworkMapping
+
+from .plan import NetworkPlan
+
+
+@dataclass(frozen=True)
+class PlanConstants:
+    """Prepared constants for every plan compiled from one network
+    mapping: ``weights[i]`` is layer i's per-tile/per-shape blocked
+    shifted-weight matrices (`cnn/mapped_net.prepared_layer_weights`)
+    when the plan runs that layer on the ``"mapped"`` executor, else
+    ``None`` (the reference/sdk executors consume raw kernels).  Valid
+    for ANY batch/tier of the network — the blocks are input- and
+    batch-independent."""
+
+    net: NetworkMapping
+    executors: Tuple[str, ...]
+    weights: Tuple[Optional[Tuple], ...]
+
+
+def _materialize(plan: NetworkPlan, kernels: Sequence) -> PlanConstants:
+    from repro.cnn.mapped_net import prepared_layer_weights
+    if len(kernels) != len(plan.layers):
+        raise ValueError(f"{len(kernels)} kernels for "
+                         f"{len(plan.layers)} planned layers")
+    weights = tuple(
+        prepared_layer_weights(lp.mapping, k) if lp.executor == "mapped"
+        else None
+        for lp, k in zip(plan.layers, kernels))
+    return PlanConstants(net=plan.net, executors=plan.executors,
+                         weights=weights)
+
+
+def prepare_constants(plan: NetworkPlan, kernels: Sequence, *,
+                      token=None) -> PlanConstants:
+    """Materialize (or fetch) the shared constants for ``plan``'s
+    network.
+
+    ``token`` identifies the kernel values (arrays are unhashable): with
+    a token the handle is memoized in ``memo.cached_constants`` keyed on
+    ``(net, resolved executors, token)``, so every tier of every ladder
+    asking for the same network's constants gets the SAME handle and the
+    blocks materialize once per network (``constant_counts`` is the
+    per-key evidence).  ``token=None`` builds an unshared handle — the
+    caller owns its lifetime.  The returned handle serves ANY plan
+    compiled from the same mapping with the same resolved executors,
+    whatever its batch/tier/mesh."""
+    def build():
+        if token is not None:
+            _note_materialize((plan.net, plan.executors, token))
+        return _materialize(plan, kernels)
+
+    if token is None:
+        return build()
+    return memo.cached_constants(("consts", plan.net, plan.executors,
+                                  token), build)
+
+
+#: Actual materializations per (net, executors, token) — cache hits do
+#: NOT count.  The fleet tests assert one materialization per network
+#: however many tiers consume the handle; bounded like
+#: exec/plan._compile_counts so a long-lived process cannot grow it.
+_constant_counts: dict = {}
+_CONSTANT_COUNT_LIMIT = 256
+
+
+def _note_materialize(key) -> None:
+    if key not in _constant_counts:
+        while len(_constant_counts) >= _CONSTANT_COUNT_LIMIT:
+            del _constant_counts[next(iter(_constant_counts))]
+        _constant_counts[key] = 0
+    _constant_counts[key] += 1
+
+
+def constant_counts(*, net: Optional[NetworkMapping] = None) -> dict:
+    """Copy of the per-key materialization counters, optionally filtered
+    to one network mapping — ``constant_counts(net=nm)`` of length 1
+    with value 1 proves the network's constants were prepared once and
+    shared across every tier that used them."""
+    out = {}
+    for key, n in _constant_counts.items():
+        if net is not None and key[0] != net:
+            continue
+        out[key] = n
+    return out
+
+
+# a cleared memo cache re-materializes, so the counters reset with it
+memo.register_cache_clear(_constant_counts.clear)

@@ -42,15 +42,18 @@ from .plan import LayerPlan, NetworkPlan, mesh_axes
 
 
 def _layer_conv(lp: LayerPlan, x: jnp.ndarray, kernel: jnp.ndarray,
-                mesh, *, jitted: bool) -> jnp.ndarray:
+                mesh, *, jitted: bool, prepared=None) -> jnp.ndarray:
     """Dispatch one layer to its planned executor — traced bodies when
     inlining into the whole-forward program, jit entries when launched
-    stand-alone (`execute_looped` / `apply_layer`)."""
+    stand-alone (`execute_looped` / `apply_layer`).  ``prepared`` is the
+    layer's pre-materialized shifted-weight blocks
+    (exec/constants.PlanConstants), consumed by the mapped executor in
+    place of the in-trace build."""
     m = lp.mapping
     mesh = mesh if lp.use_mesh else None
     if lp.executor == "mapped":
         fn = mapped_conv2d_jit if jitted else mapped_conv2d_traced
-        return fn(m, x, kernel, mesh=mesh)
+        return fn(m, x, kernel, mesh=mesh, weights=prepared)
     if lp.executor == "sdk":
         from repro.kernels.im2win_conv import sdk_conv_jit, sdk_conv_traced
         fn = sdk_conv_jit if jitted else sdk_conv_traced
@@ -83,10 +86,16 @@ def _fence_jvp(primals, tangents):
 
 
 def _forward(plan: NetworkPlan, kernels, x: jnp.ndarray, mesh,
-             activation, *, jitted: bool, conv=None) -> jnp.ndarray:
+             activation, *, jitted: bool, conv=None,
+             consts=None) -> jnp.ndarray:
     """The planned forward chain.  Glue kinds were classified at compile
     time (exec/glue.py); this only replays them.  ``conv`` overrides the
-    per-layer executor (the lax.conv oracle of `execute_oracle`)."""
+    per-layer executor (the lax.conv oracle of `execute_oracle`).
+    ``consts`` is PlanConstants.weights — per-layer pre-materialized
+    shifted-weight blocks.  Deliberately NOT threaded through the
+    lookahead fence below: the fence bounds *in-program* kernel-side
+    prep, and a pre-materialized buffer has none — XLA hoisting a plain
+    program input to the start is free."""
     lay0 = plan.layers[0].mapping.layer
     if x.shape[1] != lay0.ic:
         raise ValueError(f"{lay0.name}: input has {x.shape[1]} channels,"
@@ -100,7 +109,8 @@ def _forward(plan: NetworkPlan, kernels, x: jnp.ndarray, mesh,
         lay = lp.mapping.layer
         xp = fit_spatial(x, lay.i_h, lay.i_w)
         y = conv(lp, xp, kernels[i]) if conv is not None else \
-            _layer_conv(lp, xp, kernels[i], mesh, jitted=jitted)
+            _layer_conv(lp, xp, kernels[i], mesh, jitted=jitted,
+                        prepared=None if consts is None else consts[i])
         if activation is not None:
             y = activation(y)
         if lp.glue == "concat":
@@ -125,14 +135,18 @@ def _forward(plan: NetworkPlan, kernels, x: jnp.ndarray, mesh,
 
 @functools.partial(jax.jit, static_argnums=(0,),
                    static_argnames=("mesh", "activation"))
-def _execute_jit(plan, kernels, x, *, mesh=None, activation=None):
-    return _forward(plan, kernels, x, mesh, activation, jitted=False)
+def _execute_jit(plan, kernels, x, consts=None, *, mesh=None,
+                 activation=None):
+    return _forward(plan, kernels, x, mesh, activation, jitted=False,
+                    consts=consts)
 
 
 @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,),
                    static_argnames=("mesh", "activation"))
-def _execute_jit_donated(plan, kernels, x, *, mesh=None, activation=None):
-    return _forward(plan, kernels, x, mesh, activation, jitted=False)
+def _execute_jit_donated(plan, kernels, x, consts=None, *, mesh=None,
+                        activation=None):
+    return _forward(plan, kernels, x, mesh, activation, jitted=False,
+                    consts=consts)
 
 
 def donation_supported(mesh=None) -> bool:
@@ -174,7 +188,7 @@ def _check_call(plan: NetworkPlan, kernels, x, mesh) -> None:
 
 def execute_plan(plan: NetworkPlan, kernels: Sequence[jnp.ndarray],
                  x: jnp.ndarray, *, mesh=None, activation=None,
-                 donate: bool = False) -> jnp.ndarray:
+                 donate: bool = False, constants=None) -> jnp.ndarray:
     """Run the planned forward as one jitted program.
 
     ``mesh`` must be the live mesh matching ``plan.mesh_axes`` (the Mesh
@@ -188,11 +202,29 @@ def execute_plan(plan: NetworkPlan, kernels: Sequence[jnp.ndarray],
     ignored when the platform the plan actually runs on — the mesh's
     devices when a mesh is bound, else the default backend
     (`donation_supported`) — does not implement donation (CPU).
+    ``constants`` is a shared `exec.constants.PlanConstants` handle for
+    this plan's network: its pre-materialized shifted-weight blocks feed
+    the mapped layers as program inputs, shared across every tier/ladder
+    of the network (``prepare_constants``).
     """
     _check_call(plan, kernels, x, mesh)
+    consts = None
+    if constants is not None:
+        if constants.net != plan.net:
+            raise ValueError("constants were prepared for a different "
+                             "network mapping than this plan")
+        if constants.executors != plan.executors:
+            raise ValueError(
+                f"constants were prepared for executors "
+                f"{constants.executors}, plan resolved {plan.executors}")
+        if len(constants.weights) != len(plan.layers):
+            raise ValueError(f"{len(constants.weights)} constant entries "
+                             f"for {len(plan.layers)} planned layers")
+        consts = constants.weights
     fn = _execute_jit_donated if donate and donation_supported(mesh) \
         else _execute_jit
-    return fn(plan, tuple(kernels), x, mesh=mesh, activation=activation)
+    return fn(plan, tuple(kernels), x, consts, mesh=mesh,
+              activation=activation)
 
 
 def execute_looped(plan: NetworkPlan, kernels: Sequence[jnp.ndarray],

@@ -47,11 +47,15 @@ from . import mesh as meshlib
 class Request:
     """One queued arrival: ``rows`` images that arrived at ``arrival_s``
     (seconds on the caller's clock).  ``payload`` is opaque to the
-    coalescer (the driver stores host-side image rows there)."""
+    coalescer (the driver stores host-side image rows there).
+    ``model`` tags the request with its target network for fleet serving
+    (`launch/fleet.FleetScheduler`); single-model serving leaves it
+    None."""
 
     rows: int
     arrival_s: float
     payload: object = None
+    model: Optional[str] = None
 
 
 class Coalescer:
@@ -89,14 +93,15 @@ class Coalescer:
     def requests(self) -> int:
         return len(self._q)
 
-    def push(self, rows: int, now: float, payload: object = None) -> None:
+    def push(self, rows: int, now: float, payload: object = None,
+             model: Optional[str] = None) -> None:
         if rows < 1:
             raise ValueError(f"request must carry >= 1 row, got {rows}")
         if rows > self.max_batch:
             raise ValueError(
                 f"request of {rows} rows exceeds max_batch="
                 f"{self.max_batch} — requests are never split")
-        self._q.append(Request(rows, now, payload))
+        self._q.append(Request(rows, now, payload, model))
         self._rows += rows
 
     def next_deadline(self) -> Optional[float]:

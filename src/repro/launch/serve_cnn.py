@@ -11,7 +11,7 @@ the mesh per request — and report images/s.  With multiple devices the
 batch shards over the "data" axis of the serving mesh while (row, col)
 carry the macro grid (``launch.mesh.make_serving_mesh``; DESIGN.md §7).
 
-Two serving modes:
+Three serving modes:
 
 * **fixed** (:func:`serve`) — every step serves one fixed request
   batch; ragged request batches are padded-and-masked to the plan batch
@@ -25,11 +25,19 @@ Two serving modes:
   queue-delay percentiles are reported.  On platforms that implement
   buffer donation the steady-state loop donates each batch's input
   buffer to the program (``execute_plan(donate=True)``).
+* **fleet** (``--fleet cnn8,inception,densenet40``) — several networks
+  share ONE serving mesh under mixed Poisson traffic: per-model
+  coalescers + plan ladders behind a cross-model drain policy, with
+  prepared shifted-weight constants shared across each network's tiers
+  (`launch/fleet.py`); per-model and aggregate effective vs padded
+  images/s, queue-delay percentiles, and SLO attainment are reported.
 
     python -m repro.launch.serve_cnn --net cnn8 --batch 8 --steps 20 \
         --p-max 4 --cache-dir /tmp/mapping-cache
     python -m repro.launch.serve_cnn --net cnn8 --max-batch 8 \
         --max-delay-ms 2 --arrival-rate 500 --requests 64
+    python -m repro.launch.serve_cnn --fleet cnn8,inception,densenet40 \
+        --max-batch 4 --arrival-rate 200 --requests 48 --slo-ms 50
 
 Prints ``serve/...`` (and per-tier ``serve_dyn/...``) CSV rows per the
 benchmark harness contract plus a human-readable summary (search time,
@@ -320,6 +328,87 @@ def _print_dynamic(net: str, s: batching.DynamicServeStats, *, tag: str,
           f"table_builds={st['table_misses']};disk_hits={st['disk_hits']}")
 
 
+def _print_fleet(stats, *, tag: str, max_batch: int, max_delay_ms: float,
+                 st: dict) -> None:
+    """Human summary + harness CSV rows for a fleet run: one
+    ``serve_fleet/<net>`` row per model, one ``serve_fleet/all``
+    aggregate."""
+    print(stats.describe())
+    for name, ms in stats.models.items():
+        if not ms.batches:
+            continue
+        exec_s = sum(t.exec_s for t in ms.tiers.values())
+        ds = ms.delays_s
+        print(f"serve_fleet/{name},"
+              f"{exec_s / ms.batches * 1e6:.1f},"
+              f"images_per_s={ms.request_images / max(exec_s, 1e-12):.1f};"
+              f"padded_images_per_s="
+              f"{ms.padded_images / max(exec_s, 1e-12):.1f};"
+              f"batches={ms.batches};"
+              f"tiers={'/'.join(str(t) for t in sorted(ms.tiers))};"
+              f"p50_ms={batching.percentile(ds, 50)*1e3:.2f};"
+              f"p95_ms={batching.percentile(ds, 95)*1e3:.2f};"
+              f"p99_ms={batching.percentile(ds, 99)*1e3:.2f};"
+              f"slo_attainment={ms.slo_attainment:.3f}")
+    print(f"serve_fleet/all,"
+          f"{stats.wall_s / max(stats.request_images, 1) * 1e6:.1f},"
+          f"images_per_s={stats.images_per_s:.1f};"
+          f"padded_images_per_s={stats.padded_images_per_s:.1f};"
+          f"models={'/'.join(stats.models)};"
+          f"slo_attainment={stats.slo_attainment:.3f};mesh={tag};"
+          f"max_batch={max_batch};max_delay_ms={max_delay_ms};"
+          f"warmup_steps={stats.warmup_steps};"
+          f"shared_constants={stats.shared_constants};"
+          f"table_builds={st['table_misses']};disk_hits={st['disk_hits']}")
+
+
+def _main_fleet(args) -> None:
+    """``--fleet a,b,c``: mixed Poisson traffic across several networks
+    on one shared serving mesh (`launch/fleet.serve_fleet`)."""
+    from . import fleet
+    names = [n.strip() for n in args.fleet.split(",") if n.strip()]
+    unknown = [n for n in names if n not in networks.NETWORKS]
+    if unknown:
+        raise SystemExit(f"unknown fleet nets {unknown} — choose from "
+                         f"{sorted(networks.NETWORKS)}")
+    mappings, search_s = {}, 0.0
+    for n in names:
+        full, s = map_for_serving(
+            n, ArrayConfig(args.ar, args.ac), args.alg,
+            grid=args.grid, p_max=args.p_max)
+        search_s += s
+        mappings[n] = fleet.chainable_prefix(full)
+        if len(mappings[n].layers) != len(full.layers):
+            print(f"{n}: serving the chainable prefix "
+                  f"({len(mappings[n].layers)}/{len(full.layers)} layers"
+                  f" — the net is a layer set, not a chain)")
+    st = memo.snapshot()
+    max_batch = args.max_batch or args.batch
+    max_delay_ms = 2.0 if args.max_delay_ms is None else args.max_delay_ms
+    max_request = args.max_request or min(4, max_batch)
+    config = fleet.FleetConfig(models=tuple(
+        fleet.ModelSpec(n, max_batch=max_batch,
+                        max_delay_s=max_delay_ms / 1e3,
+                        slo_ms=args.slo_ms) for n in names))
+    trace = fleet.mixed_poisson_trace(names, args.requests,
+                                      args.arrival_rate, max_request,
+                                      seed=args.seed)
+    mesh = None if args.no_mesh else fleet.fleet_mesh_for(mappings,
+                                                          max_batch)
+    tag = meshlib.mesh_tag(mesh) if mesh is not None else "vmap"
+    print(f"fleet [{args.alg}] nets={'/'.join(names)} mesh={tag} "
+          f"search={search_s*1e3:.1f}ms "
+          f"(table_builds={st['table_misses']} "
+          f"disk_hits={st['disk_hits']})")
+    stats, _ = fleet.serve_fleet(
+        mappings, config, trace, mesh=mesh, policy=args.policy,
+        warmup=args.warmup, seed=args.seed,
+        donate=False if args.no_donate else None,
+        share_constants=not args.no_share_constants)
+    _print_fleet(stats, tag=tag, max_batch=max_batch,
+                 max_delay_ms=max_delay_ms, st=st)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--net", default="cnn8", choices=sorted(networks.NETWORKS))
@@ -377,10 +466,27 @@ def main(argv=None) -> None:
     dyn.add_argument("--max-request", type=int, default=None,
                      help="largest rows per ragged request (default: "
                           "min(4, max-batch))")
+    flt = ap.add_argument_group(
+        "fleet serving (multi-model; enabled by --fleet)")
+    flt.add_argument("--fleet", default=None,
+                     help="comma list of nets to serve together on one "
+                          "shared mesh under mixed Poisson traffic "
+                          "(e.g. cnn8,inception,densenet40); reuses the "
+                          "dynamic-batching knobs per model")
+    flt.add_argument("--slo-ms", type=float, default=None,
+                     help="per-request queue-delay SLO target for "
+                          "attainment reporting (fleet mode)")
+    flt.add_argument("--no-share-constants", action="store_true",
+                     help="materialize shifted-weight constants per "
+                          "tier instead of once per network")
     args = ap.parse_args(argv)
 
     if args.cache_dir is not None:
         memo.set_disk_cache(args.cache_dir, max_bytes=args.cache_max_bytes)
+
+    if args.fleet is not None:
+        _main_fleet(args)
+        return
 
     mapping, search_s = map_for_serving(
         args.net, ArrayConfig(args.ar, args.ac), args.alg,

@@ -165,6 +165,25 @@ def test_percentile_nearest_rank():
         percentile(xs, 101)
 
 
+def test_percentile_matches_numpy_inverted_cdf():
+    """The pure-Python nearest-rank percentile is exactly numpy's
+    ``method="inverted_cdf"`` — random inputs across sizes, the full
+    q sweep including the q=0 / q=100 / singleton edges."""
+    rng = np.random.RandomState(11)
+    qs = [0, 1, 25, 50, 75, 90, 95, 99, 100]
+    for n in [1, 2, 3, 5, 8, 17, 100]:
+        xs = rng.randn(n).tolist()
+        for q in qs + [float(rng.uniform(0, 100)) for _ in range(5)]:
+            expect = float(np.percentile(xs, q, method="inverted_cdf"))
+            assert percentile(xs, q) == expect, (n, q)
+    assert percentile([4.0], 0) == 4.0 == percentile([4.0], 100)
+    xs = [3.0, 1.0, 2.0]
+    assert percentile(xs, 0) == float(
+        np.percentile(xs, 0, method="inverted_cdf")) == 1.0
+    assert percentile(xs, 100) == float(
+        np.percentile(xs, 100, method="inverted_cdf")) == 3.0
+
+
 def test_tier_stats_effective_vs_padded_and_delays():
     ts = TierStats(plan_batch=4)
     co = Coalescer(4, 0.0)
