@@ -11,12 +11,14 @@ import argparse
 from . import (fig14_speedup, fig15_grouped_speedup, fig17_18_system,
                fig19_ablation, fig20_macro_parallel, fleet_bench,
                kernels_bench, mobilenet_depthwise, plan_bench,
-               search_bench, serve_bench, table1_mapping, table2_grouped)
+               search_bench, serve_bench, table1_mapping, table2_grouped,
+               transformer_bench)
 
 MODULES = [table1_mapping, table2_grouped, fig14_speedup,
            fig15_grouped_speedup, fig17_18_system, fig19_ablation,
            fig20_macro_parallel, mobilenet_depthwise, kernels_bench,
-           plan_bench, search_bench, serve_bench, fleet_bench]
+           plan_bench, search_bench, serve_bench, fleet_bench,
+           transformer_bench]
 
 
 def main() -> None:

@@ -1,0 +1,90 @@
+"""Transformer serving throughput through the operator-generic plan path.
+
+The ISSUE 8 acceptance artifact: both transformer smoke configs
+(`launch.transformer.TRANSFORMERS`) lower block-by-block into matmul
+specs + GlueSpec glue, compile through the SAME `exec.compile_plan` the
+CNN serve path uses, and run steady-state forwards through
+`execute_plan` — tokens/s is reported next to images/s (a "request" is
+one ``seq``-token frame, `launch.transformer.tokens_per_row`).
+
+Medians over interleaved steady-state rounds; ``--smoke`` keeps one
+block per config so the CPU CI job compiles in seconds.
+
+    python -m benchmarks.transformer_bench --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import ArrayConfig, MacroGrid, memo
+from repro.exec import compile_plan, execute_plan
+from repro.launch.transformer import (TRANSFORMERS, tokens_per_row,
+                                      transformer_mapping)
+
+from .common import Row, median
+
+SEQ = 16
+BATCH = 2
+ARRAY = ArrayConfig(64, 64)
+GRID = MacroGrid(2, 2)
+ROUNDS = 3
+STEPS = 4
+
+
+def _serve_rate(plan, kernels, x) -> float:
+    """Steady-state seconds per forward (one warmup outside the clock)."""
+    import jax
+    jax.block_until_ready(execute_plan(plan, kernels, x))
+    t0 = time.perf_counter()
+    for _ in range(STEPS):
+        jax.block_until_ready(execute_plan(plan, kernels, x))
+    return (time.perf_counter() - t0) / STEPS
+
+
+def run(full: bool = False):
+    import jax.numpy as jnp
+    rng = np.random.RandomState(0)
+    rows = []
+    for name in sorted(TRANSFORMERS):
+        memo.clear()
+        t0 = time.perf_counter()
+        net = transformer_mapping(name, seq=SEQ, array=ARRAY, grid=GRID,
+                                  blocks=None if full else 1)
+        search_s = time.perf_counter() - t0
+        plan = compile_plan(net, executor_policy="mapped", batch=BATCH)
+        assert plan.total_steps == net.total_cycles
+        kernels = [jnp.asarray(
+            rng.randn(1, 1, m.layer.ic // m.group, m.layer.oc) * 0.1,
+            jnp.float32) for m in net.layers]
+        d_model = net.layers[0].layer.ic
+        x = jnp.asarray(rng.randn(BATCH, d_model, SEQ, 1) * 0.5,
+                        jnp.float32)
+        s = median([_serve_rate(plan, kernels, x) for _ in range(ROUNDS)])
+        toks = BATCH * tokens_per_row(net)
+        rows.append(Row(
+            f"transformer/{name}", s * 1e6,
+            f"tokens_per_s={toks / s:.1f};"
+            f"images_per_s={BATCH / s:.1f};"
+            f"seq={SEQ};batch={BATCH};layers={len(net.layers)};"
+            f"total_cycles={net.total_cycles};"
+            f"search_ms={search_s * 1e3:.1f}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one block per config (the CI artifact)")
+    ap.add_argument("--full", action="store_true",
+                    help="all blocks of each smoke config")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(full=args.full and not args.smoke):
+        print(row.csv(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,15 +8,15 @@
 # mapper.py     top-level dispatch
 # simulator.py  NeuroSim-style latency/energy/area/EDAP model
 # networks.py   benchmark conv stacks (CNN8, Inception, DenseNet40, MobileNet)
-from .types import (ArrayConfig, ConvLayerSpec, LayerMapping, MacroGrid,
-                    MarginalWindow, NetworkMapping, TileMapping, Window,
-                    conv1d)
+from .types import (ArrayConfig, ConvLayerSpec, GlueSpec, LayerMapping,
+                    MacroGrid, MarginalWindow, NetworkMapping, TileMapping,
+                    Window, conv1d, matmul_spec)
 from .mapper import ALGORITHMS, grid_search, map_layer, map_net
 from . import memo, networks
 
 __all__ = [
-    "ArrayConfig", "ConvLayerSpec", "LayerMapping", "MacroGrid",
+    "ArrayConfig", "ConvLayerSpec", "GlueSpec", "LayerMapping", "MacroGrid",
     "MarginalWindow", "NetworkMapping", "TileMapping", "Window", "conv1d",
-    "ALGORITHMS", "grid_search", "map_layer", "map_net", "memo",
-    "networks",
+    "matmul_spec", "ALGORITHMS", "grid_search", "map_layer", "map_net",
+    "memo", "networks",
 ]

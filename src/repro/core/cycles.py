@@ -12,6 +12,13 @@ paper:
 
 Verified against the paper: VW-SDK/CNN8/512x512 => 128 total cycles and
 Tetris-SDK => 116 (Table I); CNN8-3 => 48 vs 38 (Fig 12).
+
+Operator-generic note (ISSUE 8): an ``op="matmul"`` spec
+(`types.matmul_spec`) is the degenerate k=1, stride=1, i_w=1 geometry, so
+both conventions coincide — every candidate window is ``1 x pw_h`` with
+``pw_h`` token positions per load, no marginals along the trivial axis —
+and the window search below applies verbatim (the ceil-form cycle count
+becomes ``ceil(M / pw_h) * ceil(ar_c / r) * ceil(ac_c / c)``).
 """
 from __future__ import annotations
 

@@ -27,6 +27,13 @@ Invariants:
   ``gc <= grid.c`` and ``gr*gc <= G`` (best_group_split's lattice), so
   ``sub_grid`` never degenerates below 1x1;
 * ties prefer fewer groups (accuracy headroom before cycle parity).
+
+Operator-generic note (ISSUE 8): grouped *matmul* is exactly this
+transform at k=1 — an ``op="matmul"`` spec (`types.matmul_spec`) with
+``groups=G`` is the paper's §III-B grouped convolution on the degenerate
+geometry, and the whole search (valid_groups, group_split, Eq 9-11)
+applies unchanged; the ``"matmul"`` executor realises the G congruent
+groups as `kernels.grouped_matmul`'s block-diagonal grid.
 """
 from __future__ import annotations
 

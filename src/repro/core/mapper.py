@@ -69,11 +69,14 @@ def map_layer(layer: ConvLayerSpec, array: ArrayConfig,
 
 def map_net(name: str, layers: Sequence[ConvLayerSpec], array: ArrayConfig,
             algorithm: str = "TetrisG-SDK",
-            grid: MacroGrid = MacroGrid(), **kw) -> NetworkMapping:
+            grid: MacroGrid = MacroGrid(), glue=None, **kw) -> NetworkMapping:
+    """Map every layer; ``glue`` (optional tuple[GlueSpec, ...], one per
+    layer) passes through to the NetworkMapping for compile_plan —
+    mapping search itself never looks at it."""
     mapped = tuple(map_layer(ly, array, algorithm, grid, **kw)
                    for ly in layers)
     return NetworkMapping(name=name, algorithm=algorithm, array=array,
-                          layers=mapped, grid=grid)
+                          layers=mapped, grid=grid, glue=glue)
 
 
 def grid_search(name: str, layers: Sequence[ConvLayerSpec],

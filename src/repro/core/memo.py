@@ -101,12 +101,12 @@ _constants_limit: int = 16
 
 #: Bump whenever search semantics or the LayerMapping schema change —
 #: on-disk entries written under another version never match again.
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2      # 2: op-kind axis on layer specs (ISSUE 8)
 
 #: Separate version for compiled NetworkPlan entries (:func:`cached_plan`)
 #: — bump when the plan IR (exec/plan.py dataclasses) or the compile
 #: semantics change without the mapping schema moving.
-PLAN_VERSION = 2        # 2: NetworkPlan.lookahead field (ISSUE 6)
+PLAN_VERSION = 3        # 3: GlueSpec glue + "matmul" executor (ISSUE 8)
 
 #: Version for persisted autotuner winners (:func:`load_tuning` /
 #: :func:`store_tuning`) — bump when the TunedConfig schema or the
@@ -483,6 +483,10 @@ def memoized_search(name: str, layer, array, grid: MacroGrid,
     if not _enabled:
         return scalar(grid)
     eff = effective_grid(grid, layer.ic, layer.oc)
-    m = cached_result((name, layer, array, eff) + tuple(extra),
+    # the op kind rides in the key explicitly (not only via the layer's
+    # repr) so a conv and a matmul spec that ever normalise to the same
+    # geometry still cannot alias each other's disk entries
+    op = getattr(layer, "op", "conv")
+    m = cached_result((name, op, layer, array, eff) + tuple(extra),
                       lambda: vectorized(eff), persist=True)
     return m if m.grid == grid else dataclasses.replace(m, grid=grid)

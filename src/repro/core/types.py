@@ -36,12 +36,20 @@ class ConvLayerSpec:
     oc: int
     stride: int = 1
     groups: int = 1
+    op: str = "conv"           # "conv" | "matmul" (degenerate 1x1 geometry)
 
     def __post_init__(self):
         if self.i_w < self.k_w or self.i_h < self.k_h:
             raise ValueError(f"{self.name}: IFM smaller than kernel")
         if self.ic % self.groups or self.oc % self.groups:
             raise ValueError(f"{self.name}: ic/oc not divisible by groups")
+        if self.op not in ("conv", "matmul"):
+            raise ValueError(f"{self.name}: unknown op {self.op!r}")
+        if self.op == "matmul" and (self.k_w != 1 or self.k_h != 1
+                                    or self.stride != 1 or self.i_w != 1):
+            raise ValueError(
+                f"{self.name}: op='matmul' must be the degenerate 1x1 "
+                f"geometry (k=1, stride=1, i_w=1); use matmul_spec()")
 
     @property
     def k(self) -> int:
@@ -78,6 +86,61 @@ def conv1d(name: str, length: int, k: int, ic: int, oc: int,
     """1-D (temporal) convolution as a degenerate Kx1 2-D layer."""
     return ConvLayerSpec(name=name, i_w=1, i_h=length, k_w=1, k_h=k,
                          ic=ic, oc=oc, groups=groups)
+
+
+def matmul_spec(name: str, m: int, d: int, f: int,
+                groups: int = 1) -> ConvLayerSpec:
+    """An ``(M, D) @ (D, F)`` matmul as the degenerate 1x1 conv the
+    mapping search already speaks: M token/row positions along ``i_h``,
+    D input channels, F output channels (grouped matmul == the paper's
+    §III-B grouped convolution with k=1).  ``macs`` reduces to
+    ``M * (D // G) * F`` and the ceil-form cycle model, utilization and
+    ``group_split`` all apply verbatim; the ``op`` tag is what executors
+    and cache keys dispatch on."""
+    return ConvLayerSpec(name=name, i_w=1, i_h=m, k_w=1, k_h=1,
+                         ic=d, oc=f, groups=groups, op="matmul")
+
+
+_GLUE_PRE = ("none", "layernorm")
+_GLUE_ACT = ("none", "relu", "gelu", "silu")
+_GLUE_POST = ("none", "attention")
+
+
+@dataclass(frozen=True)
+class GlueSpec:
+    """Inter-layer glue for one plan step — everything between two mapped
+    layers that the CIM macros do not execute.
+
+    Applied around layer i's mapped op in this order: ``save`` captures
+    the (pre-norm) input for a later residual; ``pre`` normalizes the
+    mapped op's input; ``act`` activates its output (overriding any
+    global activation for this layer); ``post='attention'`` runs the
+    opaque flash-attention stage on a fused qkv output (``heads =
+    (n_q, n_kv, head_dim)``); ``kind`` then forms the next layer's
+    input — "chain" passes through, "concat" is the DenseNet skip,
+    "residual" pops the innermost saved input and adds it.
+    """
+
+    kind: str = "chain"        # "chain" | "concat" | "residual" | "last"
+    pre: str = "none"
+    act: str = "none"
+    post: str = "none"
+    save: bool = False
+    heads: "Tuple[int, int, int]" = None  # (n_q_heads, n_kv_heads, head_dim)
+    causal: bool = True
+
+    def __post_init__(self):
+        if self.kind not in ("chain", "concat", "residual", "last",
+                             "layerwise"):
+            raise ValueError(f"unknown glue kind {self.kind!r}")
+        if self.pre not in _GLUE_PRE:
+            raise ValueError(f"unknown glue pre {self.pre!r}")
+        if self.act not in _GLUE_ACT:
+            raise ValueError(f"unknown glue act {self.act!r}")
+        if self.post not in _GLUE_POST:
+            raise ValueError(f"unknown glue post {self.post!r}")
+        if (self.heads is not None) != (self.post == "attention"):
+            raise ValueError("heads required iff post='attention'")
 
 
 @dataclass(frozen=True)
@@ -280,13 +343,26 @@ class LayerMapping:
 
 @dataclass(frozen=True)
 class NetworkMapping:
-    """Mapping of a whole network: one LayerMapping per conv layer."""
+    """Mapping of a whole network: one LayerMapping per mapped layer.
+
+    ``glue`` is optional explicit inter-layer glue (one `GlueSpec` per
+    layer, e.g. from `launch.transformer.transformer_mapping`); when
+    None, ``compile_plan`` infers chain/concat glue from channel
+    arithmetic as it always has for CNNs.
+    """
 
     name: str
     algorithm: str
     array: ArrayConfig
     layers: tuple                  # tuple[LayerMapping, ...]
     grid: MacroGrid = MacroGrid()
+    glue: tuple = None             # Optional[tuple[GlueSpec, ...]]
+
+    def __post_init__(self):
+        if self.glue is not None and len(self.glue) != len(self.layers):
+            raise ValueError(
+                f"{self.name}: glue length {len(self.glue)} != "
+                f"{len(self.layers)} layers")
 
     @property
     def total_cycles(self) -> int:

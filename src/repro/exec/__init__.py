@@ -1,10 +1,13 @@
-"""Compiled execution plans: one IR for all three executors.
+"""Compiled execution plans: one operator-generic IR for all executors.
 
 `compile_plan` lowers a `NetworkMapping` once — executor choice per
-layer, super-step schedule (steps==cycles checked at compile time),
-inter-layer glue, sharding decisions — and `execute_plan` runs the whole
-forward as a single jitted program with cross-layer overlap.  See
-DESIGN.md §8 and the module docstrings of exec/plan.py / exec/run.py.
+layer (conv executors plus the ``"matmul"`` MXU path for op="matmul"
+layers), super-step schedule (steps==cycles checked at compile time),
+inter-layer glue (inferred chain/concat for CNNs, or the mapping's
+explicit `GlueSpec` tuple for transformer lowerings), sharding decisions
+— and `execute_plan` runs the whole forward as a single jitted program
+with cross-layer overlap.  See DESIGN.md §8/§11 and the module
+docstrings of exec/plan.py / exec/run.py.
 
     from repro.exec import compile_plan, execute_plan
     plan = compile_plan(net_mapping, executor_policy="auto",
@@ -12,17 +15,18 @@ DESIGN.md §8 and the module docstrings of exec/plan.py / exec/run.py.
     y = execute_plan(plan, kernels, x, mesh=mesh)
 """
 from .constants import PlanConstants, constant_counts, prepare_constants
-from .glue import GLUE_KINDS, center_crop, fit_spatial, resolve_chain
+from .glue import (ACTIVATIONS, GLUE_KINDS, GlueSpec, attention_stage,
+                   center_crop, fit_spatial, layernorm, resolve_chain)
 from .plan import (EXECUTORS, LayerPlan, NetworkPlan, PolicyLike,
                    compile_counts, compile_plan)
 from .run import (apply_layer, donation_supported, execute_layerwise,
                   execute_looped, execute_oracle, execute_plan)
 
 __all__ = [
-    "GLUE_KINDS", "EXECUTORS", "LayerPlan", "NetworkPlan",
-    "PlanConstants", "PolicyLike", "apply_layer", "center_crop",
-    "compile_counts", "compile_plan", "constant_counts",
-    "donation_supported", "execute_layerwise", "execute_looped",
-    "execute_oracle", "execute_plan", "fit_spatial", "prepare_constants",
-    "resolve_chain",
+    "ACTIVATIONS", "GLUE_KINDS", "GlueSpec", "EXECUTORS", "LayerPlan",
+    "NetworkPlan", "PlanConstants", "PolicyLike", "apply_layer",
+    "attention_stage", "center_crop", "compile_counts", "compile_plan",
+    "constant_counts", "donation_supported", "execute_layerwise",
+    "execute_looped", "execute_oracle", "execute_plan", "fit_spatial",
+    "layernorm", "prepare_constants", "resolve_chain",
 ]

@@ -46,8 +46,9 @@ class PlanConstants:
     mapping: ``weights[i]`` is layer i's per-tile/per-shape blocked
     shifted-weight matrices (`cnn/mapped_net.prepared_layer_weights`)
     when the plan runs that layer on the ``"mapped"`` executor, else
-    ``None`` (the reference/sdk executors consume raw kernels).  Valid
-    for ANY batch/tier of the network — the blocks are input- and
+    ``None`` (the reference/sdk/matmul executors consume raw kernels —
+    an op="matmul" layer's weight matrix needs no shifted duplication).
+    Valid for ANY batch/tier of the network — the blocks are input- and
     batch-independent."""
 
     net: NetworkMapping

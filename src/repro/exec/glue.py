@@ -14,19 +14,84 @@ exactly; the glue closes the gap in two orthogonal directions:
   equals their sum, and a clear error otherwise.
 
 Both are mirrored by the reference composition (`reference_net_apply`)
-so equivalence tests compare executors, not plumbing.  This module is a
-leaf — pure jax + stdlib — so every executor layer can import it.
+so equivalence tests compare executors, not plumbing.
+
+Since the operator-generic refactor (ISSUE 8, DESIGN.md §11) glue is a
+structured `repro.core.GlueSpec` — ``kind`` is the carry rule below,
+plus optional per-layer stages the CIM macros do not execute: ``pre``
+layernorm passthrough (:func:`layernorm`), ``act`` activations
+(:data:`ACTIVATIONS`), ``save``/``kind="residual"`` for transformer
+residual adds, and the ``post="attention"`` opaque stage
+(:func:`attention_stage`) that turns a fused qkv projection's output
+into attention context via `kernels.flash_attention` between two mapped
+matmuls.  This module stays a leaf — jax + kernels only — so every
+executor layer can import it.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-#: Post-layer carry updates a plan can prescribe (LayerPlan.glue):
+from repro.core.types import GlueSpec  # noqa: F401  (re-export)
+
+#: Post-layer carry updates a plan can prescribe (LayerPlan.glue.kind):
 #: "chain" — carry becomes the layer's output; "concat" — carry becomes
-#: concat(center-cropped layer input, output); "last" — final layer,
-#: the output IS the result.
-GLUE_KINDS = ("chain", "concat", "last")
+#: concat(center-cropped layer input, output); "residual" — carry becomes
+#: saved input + output (transformer skip); "last" — final layer, the
+#: output IS the result.
+GLUE_KINDS = ("chain", "concat", "residual", "last")
+
+#: Per-layer glue activations (GlueSpec.act).  A layer whose glue names
+#: one overrides any network-global ``activation`` for that layer.
+ACTIVATIONS = {"relu": jax.nn.relu, "gelu": jax.nn.gelu,
+               "silu": jax.nn.silu}
+
+
+def layernorm(x: jnp.ndarray, axis: int = 1,
+              eps: float = 1e-5) -> jnp.ndarray:
+    """Parameter-free layernorm over the channel axis (GlueSpec.pre).
+    The mapped-serving lowering keeps norms outside the CIM macros as
+    passthrough stages (geometry over weights — rmsnorm configs lower
+    here too); learned scale/bias would fold into the next matmul's
+    mapped weights, not into glue."""
+    mu = jnp.mean(x, axis=axis, keepdims=True)
+    var = jnp.var(x, axis=axis, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+def attention_stage(y: jnp.ndarray, heads, causal: bool, *,
+                    interpret: bool = False) -> jnp.ndarray:
+    """The opaque attention stage (GlueSpec.post="attention"): consume a
+    fused qkv projection's output ``y (B, (hq+2*hkv)*hd, M, 1)`` and
+    return context ``(B, hq*hd, M, 1)`` for the mapped O projection.
+
+    Runs `kernels.flash_attention.mha_flash` when M tiles by its block
+    constraint (any M <= 128, or M % 128 == 0), else falls back to the
+    plain-softmax oracle — the stage is glue, not a mapped layer, so
+    cycle accounting is unaffected either way."""
+    from repro.kernels import flash_attention as fa
+    from repro.kernels import ref
+    hq, hkv, hd = heads
+    b, c, m, w = y.shape
+    if w != 1 or c != (hq + 2 * hkv) * hd:
+        raise ValueError(f"attention_stage: qkv output {y.shape} != "
+                         f"(B, {(hq + 2 * hkv) * hd}, M, 1) for "
+                         f"heads={heads}")
+    tok = y[..., 0].transpose(0, 2, 1)                   # (B, M, C)
+    q = tok[..., :hq * hd].reshape(b, m, hq, hd)
+    k = tok[..., hq * hd:(hq + hkv) * hd].reshape(b, m, hkv, hd)
+    v = tok[..., (hq + hkv) * hd:].reshape(b, m, hkv, hd)
+    if m <= 128 or m % 128 == 0:
+        o = fa.mha_flash(q, k, v, causal=causal, interpret=interpret)
+    else:                                   # ragged long seq: oracle path
+        qf = q.transpose(0, 2, 1, 3).reshape(b * hq, m, hd)
+        rep = hq // hkv
+        kf = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1)
+        vf = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1)
+        o = ref.flash_attention_ref(
+            qf, kf.reshape(b * hq, m, hd), vf.reshape(b * hq, m, hd),
+            causal=causal).reshape(b, hq, m, hd).transpose(0, 2, 1, 3)
+    return o.reshape(b, m, hq * hd).transpose(0, 2, 1)[..., None]
 
 
 def fit_spatial(x: jnp.ndarray, i_h: int, i_w: int) -> jnp.ndarray:

@@ -39,13 +39,16 @@ from typing import Callable, Optional, Sequence, Tuple, Union
 import jax
 
 from repro.core import memo
-from repro.core.types import NetworkMapping
+from repro.core.types import GlueSpec, NetworkMapping
 from repro.cnn.mapped_net import LayerSchedule, check_steps, layer_schedule
 from repro.launch.sharding import macro_mesh_fits
 from .glue import resolve_chain
 
-#: Executors a plan can dispatch a layer to.
-EXECUTORS = ("reference", "mapped", "sdk")
+#: Executors a plan can dispatch a layer to.  "matmul" is the MXU path
+#: for ``op="matmul"`` layers (kernels/matmul_exec.py:
+#: tetris_matmul / grouped_matmul); the conv executors also accept
+#: matmul layers as the degenerate 1x1 conv they are.
+EXECUTORS = ("reference", "mapped", "sdk", "matmul")
 
 #: Anything compile_plan accepts as a policy: one name (or "auto") for
 #: every layer, a per-layer sequence of names, or a callable
@@ -59,9 +62,9 @@ class LayerPlan:
     re-derive, fixed at compile time."""
 
     mapping: object             # LayerMapping (frozen, hashable)
-    executor: str               # "reference" | "mapped" | "sdk"
+    executor: str               # "reference" | "mapped" | "sdk" | "matmul"
     schedule: LayerSchedule     # steps==cycles evidence (compile-time)
-    glue: str                   # "chain" | "concat" | "last" | "layerwise"
+    glue: GlueSpec              # structured inter-layer glue (core.types)
     carry_c: int                # channels entering this layer
     use_mesh: bool              # shard_map vs vmap, decided at compile
     interpret: bool = False     # sdk: pallas interpret mode (off-TPU)
@@ -138,14 +141,18 @@ def _sdk_realizable(mapping) -> bool:
 
 
 def _auto_executor(mapping, *, backend: str) -> str:
-    """Per-layer heuristic: the Pallas MXU path on TPU when the mapping
-    owes no macro/group parallelism (its ``block="auto"`` tiling handles
-    the VMEM budget per layer size); the macro-parallel executor
-    whenever a non-degenerate sub-grid must be realized; otherwise the
-    placement-batched reference path (fewest ops — fastest
-    off-accelerator)."""
-    if backend == "tpu" and _sdk_realizable(mapping):
-        return "sdk"
+    """Per-layer heuristic: the Pallas MXU paths on TPU — ``"matmul"``
+    for op="matmul" layers (tetris_matmul / grouped_matmul own the
+    tiling), ``"sdk"`` for conv layers owing no macro/group parallelism
+    (its ``block="auto"`` tiling handles the VMEM budget per layer
+    size); the macro-parallel executor whenever a non-degenerate
+    sub-grid must be realized; otherwise the placement-batched reference
+    path (fewest ops — fastest off-accelerator)."""
+    if backend == "tpu":
+        if getattr(mapping.layer, "op", "conv") == "matmul":
+            return "matmul"
+        if _sdk_realizable(mapping):
+            return "sdk"
     if mapping.sub_grid.p > 1 or mapping.group_rounds < mapping.group:
         return "mapped"
     return "reference"
@@ -188,6 +195,7 @@ def _compile(net: NetworkMapping, execs: Tuple[str, ...], mesh,
             f"pad_to_data_axis(batch, mesh) or drop the data axis")
     layers = []
     carry_c = net.layers[0].layer.ic
+    saved: list = []                # channel widths of GlueSpec.save stack
     for i, (m, ex) in enumerate(zip(net.layers, execs)):
         lay = m.layer
         check_steps(m)                      # steps==cycles, at compile time
@@ -197,27 +205,94 @@ def _compile(net: NetworkMapping, execs: Tuple[str, ...], mesh,
                 f"sequentially and cannot realize sub-grid "
                 f"{m.sub_grid.r}x{m.sub_grid.c} / {m.group_rounds} group "
                 f"rounds — use 'mapped'")
+        if ex == "matmul" and getattr(lay, "op", "conv") != "matmul":
+            raise ValueError(
+                f"{lay.name}: executor 'matmul' requires op='matmul' "
+                f"(this layer is op={getattr(lay, 'op', 'conv')!r})")
         use_mesh = (ex == "mapped"
                     and macro_mesh_fits(mesh, m.sub_grid.r, m.sub_grid.c,
                                         batch=batch))
-        if chained:
+        if not chained:
+            glue = GlueSpec(kind="layerwise")
+        elif net.glue is not None:
+            glue = net.glue[i]
+            carry_c, saved = _check_explicit_glue(net, i, glue, carry_c,
+                                                  saved)
+        else:
             if i + 1 < len(net.layers):
                 nxt = net.layers[i + 1].layer
-                glue = resolve_chain(lay.name, lay.oc, carry_c,
-                                     nxt.name, nxt.ic)
+                glue = GlueSpec(kind=resolve_chain(
+                    lay.name, lay.oc, carry_c, nxt.name, nxt.ic))
             else:
-                glue = "last"
-        else:
-            glue = "layerwise"
+                glue = GlueSpec(kind="last")
         layers.append(LayerPlan(
             mapping=m, executor=ex, schedule=layer_schedule(m),
-            glue=glue, carry_c=carry_c, use_mesh=use_mesh,
+            glue=glue, carry_c=carry_c if net.glue is None or not chained
+            else lay.ic, use_mesh=use_mesh,
             interpret=interpret, block=block, vmem_budget=vmem_budget))
-        carry_c = net.layers[i + 1].layer.ic if i + 1 < len(net.layers) \
-            else lay.oc
+        if net.glue is None or not chained:
+            carry_c = net.layers[i + 1].layer.ic \
+                if i + 1 < len(net.layers) else lay.oc
+    if chained and net.glue is not None and saved:
+        raise ValueError(
+            f"{net.name}: {len(saved)} saved residual input(s) never "
+            f"consumed by a kind='residual' glue")
     return NetworkPlan(net=net, layers=tuple(layers),
                        mesh_axes=mesh_axes(mesh), batch=batch,
                        chained=chained, lookahead=lookahead)
+
+
+def _check_explicit_glue(net: NetworkMapping, i: int, spec: GlueSpec,
+                         carry_c: int, saved: list):
+    """Compile-time channel simulation of one explicit-glue step: what
+    `resolve_chain` does for inferred CNN glue, generalized to the
+    save/residual stack and the attention stage.  Returns the carry
+    channel count entering layer i+1 and the updated saved stack —
+    raising the mis-chaining error here, never mid-forward."""
+    lay = net.layers[i].layer
+    last = i + 1 == len(net.layers)
+    if lay.ic != carry_c:
+        raise ValueError(
+            f"{lay.name}: glue carries {carry_c} channels into a layer "
+            f"with ic={lay.ic}")
+    if spec.kind == "layerwise" or (spec.kind == "last" and not last):
+        raise ValueError(
+            f"{lay.name}: glue kind {spec.kind!r} is invalid for chained "
+            f"layer {i} of {len(net.layers)}")
+    out_c = lay.oc
+    if spec.post == "attention":
+        hq, hkv, hd = spec.heads
+        if getattr(lay, "op", "conv") != "matmul" \
+                or lay.oc != (hq + 2 * hkv) * hd:
+            raise ValueError(
+                f"{lay.name}: post='attention' with heads "
+                f"({hq}q, {hkv}kv, {hd}d) needs an op='matmul' layer "
+                f"with oc={(hq + 2 * hkv) * hd}, got op="
+                f"{getattr(lay, 'op', 'conv')!r} oc={lay.oc}")
+        out_c = hq * hd
+    saved = list(saved)
+    if spec.save:
+        saved.append(carry_c)
+    if spec.kind == "residual":
+        if not saved:
+            raise ValueError(f"{lay.name}: kind='residual' with no saved "
+                             f"input (no earlier glue set save=True)")
+        res_c = saved.pop()
+        if res_c != out_c:
+            raise ValueError(
+                f"{lay.name}: residual add of {res_c} saved channels "
+                f"onto {out_c} output channels")
+        nxt_c = out_c
+    elif spec.kind == "concat":
+        nxt_c = carry_c + out_c
+    else:                               # "chain" or final "last"
+        nxt_c = out_c
+    if not last and net.layers[i + 1].layer.ic != nxt_c:
+        nxt = net.layers[i + 1].layer
+        raise ValueError(
+            f"cannot chain {lay.name} ({spec.kind}, {nxt_c} carry "
+            f"channels) into {nxt.name} (ic={nxt.ic})")
+    return nxt_c, saved
 
 
 def compile_plan(net: NetworkMapping, *,

@@ -37,7 +37,8 @@ from jax import lax
 
 from repro.cnn.cim_conv import cim_conv2d_jit, cim_conv2d_traced
 from repro.cnn.mapped_net import mapped_conv2d_jit, mapped_conv2d_traced
-from .glue import center_crop, fit_spatial
+from .glue import (ACTIVATIONS, attention_stage, center_crop, fit_spatial,
+                   layernorm)
 from .plan import LayerPlan, NetworkPlan, mesh_axes
 
 
@@ -54,6 +55,11 @@ def _layer_conv(lp: LayerPlan, x: jnp.ndarray, kernel: jnp.ndarray,
     if lp.executor == "mapped":
         fn = mapped_conv2d_jit if jitted else mapped_conv2d_traced
         return fn(m, x, kernel, mesh=mesh, weights=prepared)
+    if lp.executor == "matmul":
+        from repro.kernels.matmul_exec import (matmul_layer_jit,
+                                               matmul_layer_traced)
+        fn = matmul_layer_jit if jitted else matmul_layer_traced
+        return fn(m, x, kernel, interpret=lp.interpret)
     if lp.executor == "sdk":
         from repro.kernels.im2win_conv import sdk_conv_jit, sdk_conv_traced
         fn = sdk_conv_jit if jitted else sdk_conv_traced
@@ -104,18 +110,39 @@ def _forward(plan: NetworkPlan, kernels, x: jnp.ndarray, mesh,
     if fused:
         global fused_trace_count
         fused_trace_count += 1
+    # with explicit glue (transformer lowerings) the glue owns every
+    # nonlinearity — the network-global activation applies only to
+    # inferred-glue (CNN) plans, where no GlueSpec.act is ever set
+    explicit = plan.net.glue is not None
     kernels = list(kernels)
+    saved = []                      # GlueSpec.save stack (residual bases)
     for i, lp in enumerate(plan.layers):
         lay = lp.mapping.layer
+        spec = lp.glue
         xp = fit_spatial(x, lay.i_h, lay.i_w)
-        y = conv(lp, xp, kernels[i]) if conv is not None else \
-            _layer_conv(lp, xp, kernels[i], mesh, jitted=jitted,
+        if spec.save:               # residual base: the pre-norm input
+            saved.append(xp)
+        xin = layernorm(xp) if spec.pre == "layernorm" else xp
+        y = conv(lp, xin, kernels[i]) if conv is not None else \
+            _layer_conv(lp, xin, kernels[i], mesh, jitted=jitted,
                         prepared=None if consts is None else consts[i])
-        if activation is not None:
+        if spec.act != "none":
+            y = ACTIVATIONS[spec.act](y)
+        elif activation is not None and not explicit:
             y = activation(y)
-        if lp.glue == "concat":
+        if spec.post == "attention":
+            # the opaque stage between mapped qkv and o projections —
+            # glue, not a mapped layer, so cycle accounting is untouched
+            y = attention_stage(y, spec.heads, spec.causal,
+                                interpret=lp.interpret)
+        if spec.kind == "concat":
             skip = center_crop(xp, y.shape[-2], y.shape[-1])
             x = jnp.concatenate([skip, y], axis=1)
+        elif spec.kind == "residual":
+            # channel match was validated at compile time; saved bases
+            # are deliberately NOT threaded through the lookahead fence —
+            # they are live carries, not kernel-side prep
+            x = saved.pop() + y
         else:                       # "chain" / "last"
             x = y
         # cross-layer pipeline depth (plan.lookahead, a compile_plan

@@ -359,9 +359,18 @@ def chainable_prefix(net_mapping):
     the same pure channel check `exec.glue.resolve_chain` applies at
     compile time (next ic == oc, or == ic + oc for concat).  Returns
     the mapping unchanged when it already chains end to end; callers
-    report the slice (`serve_cnn._main_fleet`, benchmarks/fleet_bench).
+    report the slice as ``ModelStats.dropped_layers``
+    (`serve_cnn._main_fleet`, benchmarks/fleet_bench).
+
+    Mappings carrying EXPLICIT glue (transformer lowerings) return
+    unchanged: their chaining — residual save/pop stacks, attention
+    channel folds — is validated by ``compile_plan`` against the glue
+    itself, and the pure oc/ic arithmetic below would mis-slice them
+    (a fused qkv's oc never equals the o projection's ic).
     """
     import dataclasses
+    if getattr(net_mapping, "glue", None) is not None:
+        return net_mapping
     layers = [m.layer for m in net_mapping.layers]
     n = 1
     for a, b in zip(layers, layers[1:]):
@@ -398,11 +407,20 @@ def fleet_mesh_for(mappings: Mapping[str, object], max_batch: int,
 class ModelStats:
     """One model's slice of a fleet run: per-tier effective vs padded
     accounting plus SLO attainment against the model's queue-delay
-    target."""
+    target.
+
+    ``tokens_per_row`` is set for transformer models (the lowered
+    sequence length, `launch.transformer.tokens_per_row`) so tokens/s
+    reports next to images/s; ``dropped_layers`` surfaces how many
+    trailing layers `chainable_prefix` cut from the served mapping
+    (0 for an end-to-end chain) — a stats/CSV field, not just a CLI
+    print."""
 
     name: str
     slo_ms: Optional[float]
     tiers: Dict[int, batching.TierStats] = field(default_factory=dict)
+    tokens_per_row: Optional[int] = None
+    dropped_layers: int = 0
 
     def record(self, launch: Launch, launch_s: float,
                exec_s: float = 0.0) -> None:
@@ -415,6 +433,13 @@ class ModelStats:
     @property
     def request_images(self) -> int:
         return sum(t.request_images for t in self.tiers.values())
+
+    @property
+    def request_tokens(self) -> Optional[int]:
+        """Tokens served (rows x lowered seq) — None for conv models."""
+        if self.tokens_per_row is None:
+            return None
+        return self.request_images * self.tokens_per_row
 
     @property
     def padded_images(self) -> int:
@@ -494,9 +519,17 @@ class FleetStats:
             if not m.batches:
                 continue
             ds = m.delays_s
+            toks = ""
+            if m.tokens_per_row is not None:
+                tps = m.request_tokens / max(self.wall_s, 1e-12)
+                toks = (f"{m.request_tokens} tokens "
+                        f"({tps:.1f} tokens/s), ")
+            dropped = (f"dropped_layers={m.dropped_layers}, "
+                       if m.dropped_layers else "")
             lines.append(
                 f"  {name}: {m.batches} batches, "
-                f"{m.request_images}/{m.padded_images} images, "
+                f"{m.request_images}/{m.padded_images} images, {toks}"
+                f"{dropped}"
                 f"queue-delay p50={batching.percentile(ds, 50)*1e3:.2f}ms "
                 f"p95={batching.percentile(ds, 95)*1e3:.2f}ms, "
                 f"slo_attainment={m.slo_attainment:.3f}")
@@ -511,15 +544,22 @@ def serve_fleet(mappings: Mapping[str, object], config: FleetConfig,
                 lookahead: Optional[int] = None,
                 block: Optional[str] = None,
                 vmem_budget: Optional[int] = None,
+                dropped_layers: Optional[Mapping[str, int]] = None,
                 clock: Callable[[], float] = time.perf_counter,
                 sleep: Callable[[float], None] = time.sleep,
                 ) -> Tuple[FleetStats, List[LaunchRecord]]:
     """Serve a tagged trace across the fleet's plan ladders on ONE
     shared mesh.
 
-    ``mappings`` maps each config model name to its `NetworkMapping`.
-    Per model: a `batching.PlanLadder` (every tier compiled against the
-    shared ``mesh``) plus — with ``share_constants`` (default) — one
+    ``mappings`` maps each config model name to its `NetworkMapping` —
+    conv nets and transformer lowerings
+    (`launch.transformer.transformer_mapping`) mix freely; transformer
+    models additionally report tokens/s (their `ModelStats` carry
+    ``tokens_per_row``).  ``dropped_layers`` records, per model, how
+    many layers `chainable_prefix` cut before serving (surfaced in the
+    stats rather than only printed).  Per model: a
+    `batching.PlanLadder` (every tier compiled against the shared
+    ``mesh``) plus — with ``share_constants`` (default) — one
     `exec.constants.PlanConstants` handle feeding every tier's program
     its pre-materialized shifted-weight blocks
     (`exec.constants.constant_counts` shows one materialization per
@@ -531,6 +571,7 @@ def serve_fleet(mappings: Mapping[str, object], config: FleetConfig,
     from repro.exec import (donation_supported, execute_plan,
                             prepare_constants)
     from .serve_cnn import _serving_kernels
+    from .transformer import tokens_per_row
 
     if warmup < 0:
         raise ValueError(f"warmup must be >= 0, got {warmup}")
@@ -579,7 +620,10 @@ def serve_fleet(mappings: Mapping[str, object], config: FleetConfig,
                 run_tier(spec.name, t, pools[spec.name][:t])
                 warmup_steps += 1
 
-    stats = {m.name: ModelStats(name=m.name, slo_ms=m.slo_ms)
+    stats = {m.name: ModelStats(
+                 name=m.name, slo_ms=m.slo_ms,
+                 tokens_per_row=tokens_per_row(mappings[m.name]),
+                 dropped_layers=(dropped_layers or {}).get(m.name, 0))
              for m in config.models}
     t0 = clock()
 

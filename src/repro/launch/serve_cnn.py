@@ -339,11 +339,17 @@ def _print_fleet(stats, *, tag: str, max_batch: int, max_delay_ms: float,
             continue
         exec_s = sum(t.exec_s for t in ms.tiers.values())
         ds = ms.delays_s
+        tok = ""
+        if ms.request_tokens is not None:
+            tok = (f"tokens_per_s="
+                   f"{ms.request_tokens / max(exec_s, 1e-12):.1f};")
         print(f"serve_fleet/{name},"
               f"{exec_s / ms.batches * 1e6:.1f},"
               f"images_per_s={ms.request_images / max(exec_s, 1e-12):.1f};"
               f"padded_images_per_s="
               f"{ms.padded_images / max(exec_s, 1e-12):.1f};"
+              f"{tok}"
+              f"dropped_layers={ms.dropped_layers};"
               f"batches={ms.batches};"
               f"tiers={'/'.join(str(t) for t in sorted(ms.tiers))};"
               f"p50_ms={batching.percentile(ds, 50)*1e3:.2f};"
@@ -363,22 +369,38 @@ def _print_fleet(stats, *, tag: str, max_batch: int, max_delay_ms: float,
 
 
 def _main_fleet(args) -> None:
-    """``--fleet a,b,c``: mixed Poisson traffic across several networks
-    on one shared serving mesh (`launch/fleet.serve_fleet`)."""
-    from . import fleet
+    """``--fleet a,b,c``: mixed Poisson traffic across several models
+    on one shared serving mesh (`launch/fleet.serve_fleet`).  Names
+    resolve against the conv benchmarks (`core.networks.NETWORKS`) and
+    the transformer lowerings (`launch.transformer.TRANSFORMERS`) — a
+    mixed CNN+transformer fleet serves both kinds side by side, with
+    tokens/s reported next to images/s."""
+    from . import fleet, transformer
     names = [n.strip() for n in args.fleet.split(",") if n.strip()]
-    unknown = [n for n in names if n not in networks.NETWORKS]
+    unknown = [n for n in names
+               if n not in networks.NETWORKS
+               and n not in transformer.TRANSFORMERS]
     if unknown:
-        raise SystemExit(f"unknown fleet nets {unknown} — choose from "
-                         f"{sorted(networks.NETWORKS)}")
-    mappings, search_s = {}, 0.0
+        raise SystemExit(
+            f"unknown fleet nets {unknown} — choose from "
+            f"{sorted(networks.NETWORKS)} or "
+            f"{sorted(transformer.TRANSFORMERS)}")
+    mappings, dropped, search_s = {}, {}, 0.0
     for n in names:
-        full, s = map_for_serving(
-            n, ArrayConfig(args.ar, args.ac), args.alg,
-            grid=args.grid, p_max=args.p_max)
+        t0 = time.perf_counter()
+        if n in transformer.TRANSFORMERS:
+            full = transformer.transformer_mapping(
+                n, seq=args.seq, array=ArrayConfig(args.ar, args.ac),
+                algorithm=args.alg, grid=args.grid or MacroGrid())
+            s = time.perf_counter() - t0
+        else:
+            full, s = map_for_serving(
+                n, ArrayConfig(args.ar, args.ac), args.alg,
+                grid=args.grid, p_max=args.p_max)
         search_s += s
         mappings[n] = fleet.chainable_prefix(full)
-        if len(mappings[n].layers) != len(full.layers):
+        dropped[n] = len(full.layers) - len(mappings[n].layers)
+        if dropped[n]:
             print(f"{n}: serving the chainable prefix "
                   f"({len(mappings[n].layers)}/{len(full.layers)} layers"
                   f" — the net is a layer set, not a chain)")
@@ -404,7 +426,8 @@ def _main_fleet(args) -> None:
         mappings, config, trace, mesh=mesh, policy=args.policy,
         warmup=args.warmup, seed=args.seed,
         donate=False if args.no_donate else None,
-        share_constants=not args.no_share_constants)
+        share_constants=not args.no_share_constants,
+        dropped_layers=dropped)
     _print_fleet(stats, tag=tag, max_batch=max_batch,
                  max_delay_ms=max_delay_ms, st=st)
 
@@ -469,10 +492,15 @@ def main(argv=None) -> None:
     flt = ap.add_argument_group(
         "fleet serving (multi-model; enabled by --fleet)")
     flt.add_argument("--fleet", default=None,
-                     help="comma list of nets to serve together on one "
-                          "shared mesh under mixed Poisson traffic "
-                          "(e.g. cnn8,inception,densenet40); reuses the "
-                          "dynamic-batching knobs per model")
+                     help="comma list of models to serve together on one "
+                          "shared mesh under mixed Poisson traffic — conv "
+                          "nets (cnn8,inception,densenet40) and transformer "
+                          "lowerings (stablelm_smoke,whisper_smoke) mix "
+                          "freely; reuses the dynamic-batching knobs per "
+                          "model")
+    flt.add_argument("--seq", type=int, default=16,
+                     help="sequence length (tokens per request row) for "
+                          "transformer fleet members")
     flt.add_argument("--slo-ms", type=float, default=None,
                      help="per-request queue-delay SLO target for "
                           "attainment reporting (fleet mode)")

@@ -35,8 +35,12 @@ from typing import Optional, Sequence, Tuple
 #: measurement: the placement-batched reference path issues the fewest
 #: ops per cycle, the macro-parallel executor pays vmap/shard_map
 #: plumbing unless a mesh absorbs it, the sdk kernel wins on the MXU.
-#: Only used to RANK seeds; measurement settles every decision.
-EXEC_WEIGHTS = {"reference": 1.0, "mapped": 1.6, "sdk": 0.8}
+#: Only used to RANK seeds; measurement settles every decision.  The
+#: "matmul" MXU path for op="matmul" layers prices like the sdk kernel:
+#: both hand the super-step to the systolic stand-in with no
+#: gather/scatter plumbing per cycle.
+EXEC_WEIGHTS = {"reference": 1.0, "mapped": 1.6, "sdk": 0.8,
+                "matmul": 0.8}
 
 
 @dataclass(frozen=True)
@@ -126,13 +130,24 @@ def policy_candidates(net, *, backend: Optional[str] = None
     n = len(net.layers)
     sdk_ok = (backend == "tpu"
               and all(_sdk_realizable(m) for m in net.layers))
+    # the "matmul" executor only accepts op="matmul" layers (exec/plan
+    # rejects it at compile time otherwise), and like sdk it only pays
+    # off on the MXU
+    matmul_ok = (backend == "tpu"
+                 and all(getattr(m.layer, "op", "conv") == "matmul"
+                         for m in net.layers))
     out = [auto]
-    for name in ("reference", "mapped") + (("sdk",) if sdk_ok else ()):
+    for name in (("reference", "mapped")
+                 + (("sdk",) if sdk_ok else ())
+                 + (("matmul",) if matmul_ok else ())):
         uniform = (name,) * n
         if uniform not in out:
             out.append(uniform)
     heavy = max(range(n), key=lambda i: net.layers[i].cycles)
     flips = ["reference", "mapped"] + (["sdk"] if sdk_ok else [])
+    if (backend == "tpu"
+            and getattr(net.layers[heavy].layer, "op", "conv") == "matmul"):
+        flips.append("matmul")
     for name in flips:
         if name == auto[heavy]:
             continue

@@ -1,0 +1,214 @@
+"""Operator-generic mapping IR (DESIGN.md §11): matmul specs lower
+through the unchanged TetrisG window/grid machinery, the "matmul"
+executor matches the einsum oracle and the other executors, the ragged
+tail blocks of the underlying kernels are exact, and the op kind rides
+in the persistent disk-cache keys so stale conv-era entries are ignored.
+"""
+import pickle
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ArrayConfig, ConvLayerSpec, MacroGrid, map_layer,
+                        matmul_spec, memo)
+from repro.cnn.mapped_net import check_steps
+
+RNG = np.random.RandomState(7)
+
+
+@pytest.fixture
+def disk_cache(tmp_path):
+    memo.clear()
+    memo.set_disk_cache(tmp_path)
+    try:
+        yield tmp_path
+    finally:
+        memo.set_disk_cache(None)
+        memo.clear()
+
+
+# --- spec lowering ---------------------------------------------------------
+
+def test_matmul_spec_is_degenerate_conv():
+    s = matmul_spec("mm", m=16, d=128, f=384)
+    assert s.op == "matmul"
+    assert (s.i_w, s.i_h, s.k_w, s.k_h, s.ic, s.oc) == (1, 16, 1, 1, 128,
+                                                        384)
+    assert s.o_h == 16 and s.o_w == 1
+    assert s.macs == 16 * 128 * 384
+    g = matmul_spec("gmm", m=16, d=128, f=384, groups=4)
+    assert g.macs == 16 * (128 // 4) * 384
+
+
+def test_matmul_op_rejects_conv_geometry():
+    with pytest.raises(ValueError, match="matmul_spec"):
+        ConvLayerSpec("bad", 18, 18, 3, 3, 8, 8, op="matmul")
+    with pytest.raises(ValueError, match="unknown op"):
+        ConvLayerSpec("bad", 18, 18, 3, 3, 8, 8, op="attention")
+
+
+@pytest.mark.parametrize("mdf,groups", [((16, 128, 384), (1,)),
+                                        ((16, 352, 128), (1, 2, 4)),
+                                        ((7, 96, 40), (1, 2, 4))])
+def test_matmul_spec_maps_and_counts(mdf, groups):
+    """The unchanged search maps a matmul spec; the ceil-form cycle
+    count and the steps==cycles invariant hold exactly."""
+    m, d, f = mdf
+    memo.clear()
+    lm = map_layer(matmul_spec("mm", m, d, f), ArrayConfig(64, 64),
+                   "TetrisG-SDK", MacroGrid(2, 2), groups=groups)
+    check_steps(lm)                       # steps == cycles, per tile
+    assert lm.layer.op == "matmul"
+    assert lm.cycles > 0
+    assert lm.utilization > 0
+
+
+def test_grouped_matmul_beats_dense_when_wide():
+    """A wide square matmul on a small array: the §III-B grouped
+    transform (k=1) must win cycles over the dense mapping."""
+    memo.clear()
+    spec = matmul_spec("mm", 16, 256, 256)
+    dense = map_layer(spec, ArrayConfig(64, 64), "TetrisG-SDK",
+                      MacroGrid(2, 2), groups=(1,))
+    grouped = map_layer(spec, ArrayConfig(64, 64), "TetrisG-SDK",
+                        MacroGrid(2, 2), groups=(1, 2, 4))
+    assert grouped.group >= 2
+    assert grouped.cycles < dense.cycles
+
+
+# --- "matmul" executor vs oracles ------------------------------------------
+
+def _mapped(m, d, f, groups=(1,)):
+    return map_layer(matmul_spec("mm", m, d, f), ArrayConfig(64, 64),
+                     "TetrisG-SDK", MacroGrid(2, 2), groups=groups)
+
+
+@pytest.mark.parametrize("mdf,groups", [((16, 64, 96), (1,)),
+                                        ((16, 128, 64), (1, 2, 4)),
+                                        ((12, 60, 40), (1, 2))])
+def test_matmul_executor_matches_einsum(mdf, groups):
+    from repro.kernels.matmul_exec import (matmul_layer_ref,
+                                           matmul_layer_traced)
+    m, d, f = mdf
+    memo.clear()
+    lm = _mapped(m, d, f, groups)
+    g = lm.group
+    kernel = jnp.asarray(RNG.randn(1, 1, d // g, f) * 0.1, jnp.float32)
+    x = jnp.asarray(RNG.randn(2, d, m, 1), jnp.float32)
+    y = matmul_layer_traced(lm, x, kernel, interpret=True)
+    r = matmul_layer_ref(lm, x, kernel)
+    assert y.shape == (2, f, m, 1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_matmul_layer_through_reference_executor():
+    """A matmul layer is an ordinary degenerate conv to the conv
+    executors — both paths agree on the same mapping and kernel."""
+    from repro.cnn.cim_conv import reference_conv2d
+    from repro.kernels.matmul_exec import matmul_layer_traced
+    memo.clear()
+    lm = _mapped(16, 64, 48)
+    kernel = jnp.asarray(RNG.randn(1, 1, 64, 48) * 0.1, jnp.float32)
+    x = jnp.asarray(RNG.randn(2, 64, 16, 1), jnp.float32)
+    y = matmul_layer_traced(lm, x, kernel, interpret=True)
+    r = reference_conv2d(lm.layer, x, kernel)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                               atol=1e-4, rtol=1e-4)
+
+
+# --- ragged tail blocks of the underlying kernels --------------------------
+# explicit block shapes that do NOT divide the problem: the clamped
+# overlapping edge blocks (the marginal-window analogue) must still
+# produce exactly the dense result on every tail row/column.
+
+@pytest.mark.parametrize("mnk,block", [
+    ((100, 60, 48), (32, 32, 16)),    # M and N tails, K divides
+    ((33, 129, 64), (32, 128, 32)),   # single-row M tail, 1-col N tail
+    ((64, 64, 50), (32, 32, 32)),     # K does not divide -> bk shrinks
+    ((7, 5, 3), (8, 8, 8)),           # blocks larger than the problem
+])
+def test_tetris_matmul_tail_blocks(mnk, block):
+    from repro.kernels.ref import matmul_ref
+    from repro.kernels.tetris_matmul import tetris_matmul
+    m, n, k = mnk
+    x = jnp.asarray(RNG.randn(m, k), jnp.float32)
+    w = jnp.asarray(RNG.randn(k, n), jnp.float32)
+    y = tetris_matmul(x, w, block=block, interpret=True)
+    r = matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                               atol=1e-4 * k, rtol=1e-4)
+
+
+@pytest.mark.parametrize("gmdf,bmbf", [
+    ((3, 50, 24, 30), (16, 16)),      # M and F tails in every group
+    ((2, 17, 40, 65), (16, 64)),      # 1-row M tail, 1-col F tail
+    ((5, 8, 12, 8), (16, 16)),        # blocks larger than the problem
+])
+def test_grouped_matmul_tail_blocks(gmdf, bmbf):
+    from repro.kernels.grouped_matmul import grouped_matmul
+    from repro.kernels.ref import grouped_matmul_ref
+    g, m, d, f = gmdf
+    bm, bf = bmbf
+    x = jnp.asarray(RNG.randn(g, m, d), jnp.float32)
+    w = jnp.asarray(RNG.randn(g, d, f), jnp.float32)
+    y = grouped_matmul(x, w, bm=bm, bf=bf, interpret=True)
+    r = grouped_matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                               atol=1e-4 * d, rtol=1e-4)
+
+
+# --- cache schema (ISSUE 8 satellite) --------------------------------------
+
+def test_conv_and_matmul_specs_never_share_disk_entries(disk_cache):
+    """Same name, same degenerate geometry, different op kind: two
+    distinct disk entries — the op axis rides in the memo key."""
+    mm = matmul_spec("t", 16, 32, 24)
+    conv = ConvLayerSpec("t", i_w=1, i_h=16, k_w=1, k_h=1, ic=32, oc=24)
+    a = map_layer(mm, ArrayConfig(64, 64), "TetrisG-SDK", MacroGrid(2, 2),
+                  groups=(1,))
+    b = map_layer(conv, ArrayConfig(64, 64), "TetrisG-SDK", MacroGrid(2, 2),
+                  groups=(1,))
+    assert a.layer.op == "matmul" and b.layer.op == "conv"
+    assert memo.stats["disk_writes"] >= 2
+    assert len(list(disk_cache.glob("*.mapping.pkl"))) >= 2
+
+
+def test_stale_schema_disk_entries_ignored(disk_cache, monkeypatch):
+    """A schema bump (the op-kind axis) must orphan old entries, not
+    deserialize them: a process with a newer SCHEMA_VERSION sees only
+    misses against an old directory and recomputes bit-identically."""
+    spec = matmul_spec("mm", 16, 64, 48)
+    first = map_layer(spec, ArrayConfig(64, 64), "TetrisG-SDK",
+                      MacroGrid(2, 2), groups=(1, 2))
+    assert memo.stats["disk_writes"] > 0
+    old_files = set(disk_cache.glob("*.mapping.pkl"))
+
+    monkeypatch.setattr(memo, "SCHEMA_VERSION", memo.SCHEMA_VERSION + 1)
+    memo.clear()                       # cold in-memory, "old" disk
+    again = map_layer(spec, ArrayConfig(64, 64), "TetrisG-SDK",
+                      MacroGrid(2, 2), groups=(1, 2))
+    assert again == first              # recomputed, not deserialized
+    assert memo.stats["disk_hits"] == 0
+    assert memo.stats["disk_writes"] > 0          # re-persisted under v+1
+    assert old_files - set(disk_cache.glob("*.mapping.pkl")) == set()
+
+
+def test_stale_payload_version_ignored(disk_cache):
+    """Belt-and-braces: an entry whose pickled payload carries the wrong
+    version (however it got to that path) reads as a miss, never as a
+    value."""
+    spec = matmul_spec("mm", 16, 32, 24)
+    first = map_layer(spec, ArrayConfig(64, 64), "TetrisG-SDK",
+                      MacroGrid(2, 2), groups=(1,))
+    files = list(disk_cache.glob("*.mapping.pkl"))
+    assert files
+    for f in files:
+        version, value = pickle.loads(f.read_bytes())
+        f.write_bytes(pickle.dumps((version + 1, value)))
+    memo.clear()
+    again = map_layer(spec, ArrayConfig(64, 64), "TetrisG-SDK",
+                      MacroGrid(2, 2), groups=(1,))
+    assert again == first
+    assert memo.stats["disk_hits"] == 0

@@ -51,8 +51,8 @@ def test_compile_plan_ir_fields():
         assert lp.schedule.steps == m.cycles     # compile-time contract
         assert not lp.use_mesh                   # no mesh given
         assert lp.carry_c == m.layer.ic
-    assert all(lp.glue == "chain" for lp in plan.layers[:-1])
-    assert plan.layers[-1].glue == "last"
+    assert all(lp.glue.kind == "chain" for lp in plan.layers[:-1])
+    assert plan.layers[-1].glue.kind == "last"
     assert "dispatches/forward=1" in plan.describe()
 
 
@@ -85,7 +85,7 @@ def test_compile_plan_rejects_bad_chain():
     with pytest.raises(ValueError, match="cannot chain"):
         compile_plan(net, executor_policy="mapped")
     plan = compile_plan(net, executor_policy="mapped", chained=False)
-    assert all(lp.glue == "layerwise" for lp in plan.layers)
+    assert all(lp.glue.kind == "layerwise" for lp in plan.layers)
     ks, _ = _data(net)
     with pytest.raises(ValueError, match="chained plan"):
         execute_plan(plan, ks, jnp.zeros((1, 1, 1, 1)))
@@ -124,7 +124,7 @@ def test_execute_plan_matches_wrapper_densenet_slice():
                grid=MacroGrid(4, 1))
     ks, x = _data(net, batch=1)
     plan = compile_plan(net, executor_policy="mapped")
-    assert any(lp.glue == "concat" for lp in plan.layers)
+    assert any(lp.glue.kind == "concat" for lp in plan.layers)
     y_fused = execute_plan(plan, ks, x)
     assert bool(jnp.all(y_fused == mapped_net_apply(net, ks, x)))
     assert bool(jnp.all(y_fused == execute_looped(plan, ks, x)))

@@ -1,0 +1,201 @@
+"""Transformer lowering end to end (DESIGN.md §11): block-by-block
+matmul specs + GlueSpec glue through compile_plan -> execute_plan,
+steps==cycles at compile time, the plan-batch ladder, and the mixed
+CNN+transformer fleet with tokens/s next to images/s."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ArrayConfig, GlueSpec, MacroGrid, memo
+from repro.exec import compile_plan, execute_plan
+from repro.launch import batching
+from repro.launch.transformer import (TRANSFORMERS, tokens_per_row,
+                                      transformer_mapping)
+
+RNG = np.random.RandomState(11)
+ARR = ArrayConfig(64, 64)
+GRID = MacroGrid(2, 2)
+
+
+def _net(name="stablelm_smoke", seq=16, blocks=1, groups=(1,)):
+    memo.clear()
+    return transformer_mapping(name, seq=seq, array=ARR, grid=GRID,
+                               blocks=blocks, groups=groups)
+
+
+def _kernels(net, scale=0.1):
+    return [jnp.asarray(RNG.randn(1, 1, m.layer.ic // m.group,
+                                  m.layer.oc) * scale, jnp.float32)
+            for m in net.layers]
+
+
+# --- lowering --------------------------------------------------------------
+
+def test_lowering_shapes_and_glue():
+    net = _net()
+    assert [m.layer.name for m in net.layers] == [
+        "blk0.qkv", "blk0.o", "blk0.w1", "blk0.w2"]
+    assert all(m.layer.op == "matmul" for m in net.layers)
+    assert len(net.glue) == 4
+    qkv, o, w1, w2 = net.glue
+    assert qkv.post == "attention" and qkv.save and qkv.pre == "layernorm"
+    assert o.kind == "residual"
+    assert w1.act in ("gelu", "silu") and w1.save
+    assert w2.kind == "residual"
+    assert tokens_per_row(net) == 16
+    assert net.total_cycles > 0
+
+
+def test_whisper_encoder_is_bidirectional():
+    net = _net("whisper_smoke", blocks=1)
+    assert net.glue[0].causal is False
+    assert net.glue[0].post == "attention"
+
+
+def test_transformer_registry_covers_smoke_configs():
+    assert set(TRANSFORMERS) == {"stablelm_smoke", "whisper_smoke"}
+    for name in TRANSFORMERS:
+        net = _net(name, blocks=1)
+        assert net.glue is not None and len(net.glue) == len(net.layers)
+
+
+def test_conv_net_has_no_tokens():
+    from repro.core import map_net, networks
+    cnn = map_net("cnn8", networks.cnn8()[:2], ARR, "Tetris-SDK", GRID)
+    assert tokens_per_row(cnn) is None
+
+
+# --- compile ---------------------------------------------------------------
+
+def test_compile_steps_equal_cycles():
+    net = _net(blocks=2)
+    plan = compile_plan(net, executor_policy="mapped", batch=2)
+    assert plan.total_steps == net.total_cycles
+    assert all(lp.glue is not None for lp in plan.layers)
+
+
+def test_compile_rejects_matmul_executor_on_conv():
+    from repro.core import map_net, networks
+    cnn = map_net("cnn8", networks.cnn8()[:2], ARR, "Tetris-SDK", GRID)
+    with pytest.raises(ValueError, match="matmul"):
+        compile_plan(cnn, executor_policy="matmul")
+
+
+def test_compile_rejects_inconsistent_glue():
+    """Explicit glue is validated by carry-channel simulation at compile
+    time: a residual with nothing saved must fail, as must a dangling
+    save."""
+    import dataclasses
+    net = _net()
+    bad = dataclasses.replace(net, glue=(
+        GlueSpec(kind="residual"),) + net.glue[1:])
+    with pytest.raises(ValueError):
+        compile_plan(bad, executor_policy="mapped")
+    dangling = dataclasses.replace(net, glue=net.glue[:3] + (
+        GlueSpec(kind="last", save=True),))
+    with pytest.raises(ValueError):
+        compile_plan(dangling, executor_policy="mapped")
+
+
+# --- execute vs a pure-jnp reference ---------------------------------------
+
+def _ref_forward(net, kernels, x, blocks):
+    """Independent oracle: plain jnp transformer blocks over the same
+    (B, d_model, M, 1) layout and parameter-free layernorm."""
+    from repro.models.attention import attention as jax_attn
+
+    def ln(t):
+        mu = t.mean(axis=1, keepdims=True)
+        var = ((t - mu) ** 2).mean(axis=1, keepdims=True)
+        return (t - mu) / jnp.sqrt(var + 1e-5)
+
+    def mm(t, w):                       # (B,d,M,1) @ (1,1,d,f)
+        return jnp.einsum("bdmo,df->bfmo", t, w[0, 0])
+
+    import jax
+    i = 0
+    for b in range(blocks):
+        qkv_g, o_g, w1_g, w2_g = net.glue[4 * b:4 * b + 4]
+        hq, hkv, hd = qkv_g.heads
+        resid = x
+        qkv = mm(ln(x), kernels[i]); i += 1
+        tok = qkv[..., 0].transpose(0, 2, 1)          # (B, M, F)
+        bsz, m, _ = tok.shape
+        q = tok[..., :hq * hd].reshape(bsz, m, hq, hd)
+        k = tok[..., hq * hd:(hq + hkv) * hd].reshape(bsz, m, hkv, hd)
+        v = tok[..., (hq + hkv) * hd:].reshape(bsz, m, hkv, hd)
+        o = jax_attn(q, k, v, causal=qkv_g.causal)    # (B, M, hq, hd)
+        y = o.reshape(bsz, m, hq * hd).transpose(0, 2, 1)[..., None]
+        x = resid + mm(y, kernels[i]); i += 1
+        resid = x
+        h = mm(ln(x), kernels[i]); i += 1
+        h = {"gelu": jax.nn.gelu, "silu": jax.nn.silu}[w1_g.act](h)
+        x = resid + mm(h, kernels[i]); i += 1
+    return x
+
+
+@pytest.mark.parametrize("policy", ["reference", "mapped"])
+def test_execute_plan_matches_jnp_reference(policy):
+    net = _net(blocks=2, groups=(1,))   # dense: the einsum oracle applies
+    kernels = _kernels(net)
+    x = jnp.asarray(RNG.randn(2, 128, 16, 1) * 0.5, jnp.float32)
+    plan = compile_plan(net, executor_policy=policy, batch=2)
+    y = execute_plan(plan, kernels, x)
+    r = _ref_forward(net, kernels, x, blocks=2)
+    assert y.shape == r.shape == (2, 128, 16, 1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                               atol=5e-4, rtol=5e-4)
+
+
+def test_explicit_glue_ignores_global_activation():
+    """An explicit-glue plan applies per-layer GlueSpec.act only — the
+    network-global activation must not leak in between layers."""
+    import jax
+    net = _net(blocks=1, groups=(1,))
+    kernels = _kernels(net)
+    x = jnp.asarray(RNG.randn(1, 128, 16, 1) * 0.5, jnp.float32)
+    plan = compile_plan(net, executor_policy="reference", batch=1)
+    base = execute_plan(plan, kernels, x)
+    with_act = execute_plan(plan, kernels, x, activation=jax.nn.relu)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(with_act))
+
+
+# --- ladder + fleet --------------------------------------------------------
+
+def test_plan_ladder_serves_transformer_tiers():
+    net = _net(blocks=1, groups=(1,))
+    kernels = _kernels(net)
+    ladder = batching.PlanLadder(net, (1, 2))
+    for tier in (1, 2):
+        t, plan = ladder.plan_for(tier)
+        assert t == tier
+        x = jnp.asarray(RNG.randn(tier, 128, 16, 1) * 0.5, jnp.float32)
+        y = execute_plan(plan, kernels, x)
+        assert y.shape == (tier, 128, 16, 1)
+
+
+def test_chainable_prefix_keeps_glue_mappings_whole():
+    from repro.launch.fleet import chainable_prefix
+    net = _net(blocks=1)
+    assert chainable_prefix(net) is net
+
+
+def test_mixed_fleet_cli_reports_tokens_and_dropped(capsys):
+    """serve_cnn --fleet with a CNN and a transformer on one mesh:
+    tokens/s rides next to images/s for the transformer, dropped-layer
+    accounting appears for every model."""
+    from repro.launch import serve_cnn
+    serve_cnn.main(["--fleet", "cnn8,stablelm_smoke", "--batch", "2",
+                    "--requests", "8", "--arrival-rate", "200",
+                    "--warmup", "1", "--slo-ms", "500", "--seq", "16",
+                    "--ar", "64", "--ac", "64", "--grid", "2x2"])
+    out = capsys.readouterr().out
+    cnn = next(ln for ln in out.splitlines()
+               if ln.startswith("serve_fleet/cnn8,"))
+    tfm = next(ln for ln in out.splitlines()
+               if ln.startswith("serve_fleet/stablelm_smoke,"))
+    assert "tokens_per_s=" in tfm and "dropped_layers=0" in tfm
+    assert "tokens_per_s=" not in cnn and "dropped_layers=" in cnn
+    agg = next(ln for ln in out.splitlines()
+               if ln.startswith("serve_fleet/all,"))
+    assert "models=cnn8/stablelm_smoke" in agg
