@@ -28,6 +28,19 @@ server while keeping the forward path one jitted program per plan:
   step under **plan-level input donation** (`execute_plan(donate=True)`
   consumes the buffer it is handed, so every step needs a fresh one);
   without donation the single uploaded buffer is reused.
+* :class:`AdaptiveDelay` — a load-proportional max-delay policy: the
+  effective coalescing delay shrinks as the queue deepens (deep backlog
+  → drain immediately; idle → wait up to the cap), plugged into the
+  coalescer as ``delay_policy`` and driven by the same explicit-``now``
+  API.
+* :class:`WorkItem` + :class:`InMemoryTransport` — the queue-transport
+  abstraction behind the multi-replica tier (`launch/replica.py`): the
+  router ships :class:`WorkItem`s to worker queues and reads tuple
+  messages (``MSG_*`` heads) off one shared result channel.  The
+  in-memory transport is the injectable fake — same duck-typed surface
+  as the real ``replica.MpTransport`` but workers are caller-supplied
+  objects stepped synchronously inside :meth:`InMemoryTransport.poll`,
+  so a fake clock drives the whole multi-process loop deterministically.
 
 Queue/tier/stats logic is pure Python on purpose: it must be testable
 under a fake clock with no devices, and the jit boundary stays exactly
@@ -38,7 +51,8 @@ from __future__ import annotations
 import math
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Deque, Dict, List, Optional, Sequence,
+                    Tuple)
 
 from . import mesh as meshlib
 
@@ -58,6 +72,38 @@ class Request:
     model: Optional[str] = None
 
 
+@dataclass(frozen=True)
+class AdaptiveDelay:
+    """Load-proportional coalescing delay (the PR 5 follow-up).
+
+    A fixed ``max_delay_s`` trades the head request's latency for fill
+    regardless of load; under a deep backlog that wait buys nothing —
+    the next tier is already full — while at idle it is exactly the
+    bound that lets a second request share the batch.  This policy
+    scales the effective delay linearly DOWN with observed queue depth:
+
+        delay(queued_rows) = max_delay_s * max(0, 1 - queued_rows/ref_rows)
+
+    so an empty-ish queue waits up to the cap and a queue at
+    ``ref_rows`` (typically ``max_batch``) drains immediately.  Pure
+    and stateless: the coalescer consults it with its current depth
+    inside :meth:`Coalescer.next_deadline`, so the same explicit-``now``
+    fake-clock tests cover it."""
+
+    max_delay_s: float
+    ref_rows: int
+
+    def __post_init__(self):
+        if self.max_delay_s < 0:
+            raise ValueError(
+                f"max_delay_s must be >= 0, got {self.max_delay_s}")
+        if self.ref_rows < 1:
+            raise ValueError(f"ref_rows must be >= 1, got {self.ref_rows}")
+
+    def __call__(self, queued_rows: int) -> float:
+        return self.max_delay_s * max(0.0, 1.0 - queued_rows / self.ref_rows)
+
+
 class Coalescer:
     """Max-delay request coalescer: drain arrivals into ready batches.
 
@@ -72,9 +118,15 @@ class Coalescer:
     ``max_batch`` is refused at :meth:`push`.  All methods take ``now``
     explicitly — the caller owns the clock, which makes the expiry
     logic exactly testable.
+
+    ``delay_policy`` (e.g. :class:`AdaptiveDelay`) makes the delay
+    load-proportional: it is called with the current queued rows and
+    returns the effective delay, clamped to ``[0, max_delay_s]`` —
+    ``max_delay_s`` stays the worst-case latency bound either way.
     """
 
-    def __init__(self, max_batch: int, max_delay_s: float):
+    def __init__(self, max_batch: int, max_delay_s: float, *,
+                 delay_policy: Optional[Callable[[int], float]] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_delay_s < 0:
@@ -82,8 +134,18 @@ class Coalescer:
                 f"max_delay_s must be >= 0, got {max_delay_s}")
         self.max_batch = max_batch
         self.max_delay_s = max_delay_s
+        self.delay_policy = delay_policy
         self._q: Deque[Request] = deque()
         self._rows = 0
+
+    def effective_delay_s(self) -> float:
+        """The delay in force at the current queue depth: the policy's
+        answer clamped to ``[0, max_delay_s]``, or ``max_delay_s``
+        without a policy."""
+        if self.delay_policy is None:
+            return self.max_delay_s
+        return min(max(float(self.delay_policy(self._rows)), 0.0),
+                   self.max_delay_s)
 
     def __len__(self) -> int:
         """Queued images (rows, not requests)."""
@@ -106,10 +168,15 @@ class Coalescer:
 
     def next_deadline(self) -> Optional[float]:
         """When the oldest queued request expires (max-delay), or None
-        on an empty queue — the latest moment the server may sleep to."""
+        on an empty queue — the latest moment the server may sleep to.
+        With a ``delay_policy`` the deadline moves EARLIER as the queue
+        deepens (it is re-derived from the live depth on every call, so
+        a push can only shrink it — callers that sleep to a stale
+        deadline wake late but never starve: the policy is clamped by
+        ``max_delay_s``)."""
         if not self._q:
             return None
-        return self._q[0].arrival_s + self.max_delay_s
+        return self._q[0].arrival_s + self.effective_delay_s()
 
     def ready(self, now: float) -> bool:
         if not self._q:
@@ -265,12 +332,25 @@ class DynamicServeStats:
     def delays_s(self) -> List[float]:
         return [d for t in self.tiers.values() for d in t.delays_s]
 
+    def delay_ms(self, q: float) -> float:
+        """Aggregate queue-delay percentile over the POOLED per-tier
+        delay samples — never an average of per-tier percentiles, which
+        is not a percentile of anything (a tier with 3 fast batches
+        would weigh as much as one with 300 slow ones)."""
+        return percentile(self.delays_s, q) * 1e3
+
     def describe(self) -> str:
         lines = [f"dynamic: {self.request_images} request images "
                  f"({self.padded_images} padded) in {self.wall_s*1e3:.1f}ms"
                  f" = {self.images_per_s:.1f} images/s "
                  f"({self.padded_images_per_s:.1f} padded), "
                  f"warmup_steps={self.warmup_steps}"]
+        if self.delays_s:
+            lines.append(
+                f"  all tiers pooled: queue-delay "
+                f"p50={self.delay_ms(50):.2f}ms "
+                f"p95={self.delay_ms(95):.2f}ms "
+                f"p99={self.delay_ms(99):.2f}ms")
         for t in sorted(self.tiers):
             ts = self.tiers[t]
             if not ts.batches:
@@ -313,3 +393,94 @@ class InputRing:
             return self._dev
         import jax
         return jax.device_put(self._host)
+
+
+# ---------------------------------------------------------------------------
+# Queue transport — the multi-replica tier's wire format (launch/replica.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WorkItem:
+    """One routed request in the multi-replica tier: what the router
+    ships to a worker's task queue.  ``seq`` is the router-assigned
+    request id — the exactly-once accounting key: completions dedupe on
+    it, and a dead worker's outstanding seqs are re-queued to survivors
+    (`launch/replica.ReplicaRouter`).  ``rows``/``arrival_s`` mean what
+    they do on :class:`Request`; the payload stays synthetic worker-side
+    (no arrays cross the queue)."""
+
+    seq: int
+    rows: int
+    arrival_s: float
+    model: Optional[str] = None
+
+
+# Message heads on the shared worker->router result channel.  Tuples,
+# not classes: they must pickle cheaply across process boundaries and
+# stay greppable in both transports.
+MSG_READY = "ready"        # (MSG_READY, wid, startup_s, table_misses, disk_hits)
+MSG_HEARTBEAT = "hb"       # (MSG_HEARTBEAT, wid, now_s)
+MSG_DONE = "done"          # (MSG_DONE, wid, tier, ((seq, rows, delay_s), ...), exec_s)
+MSG_DYING = "dying"        # (MSG_DYING, wid, reason) — flushed before death
+MSG_STATS = "stats"        # (MSG_STATS, wid, served_rows, padded_rows, batches)
+
+# Router->worker control messages (WorkItems ride the same task queue).
+CTRL_GO = "go"             # (CTRL_GO, epoch_s): start serving, shared clock zero
+CTRL_STOP = "stop"         # (CTRL_STOP,): drain, report stats, exit
+CTRL_DIE = "die"           # (CTRL_DIE,): crash injection — exit WITHOUT draining
+
+
+class InMemoryTransport:
+    """Injectable in-memory fake of the multi-replica queue transport.
+
+    Duck-type twin of `launch/replica.MpTransport` (``start_worker`` /
+    ``send`` / ``poll`` / ``alive`` / ``kill`` / ``join``) with nothing
+    crossing a process boundary: ``factory(wid, cfg, inbox, emit)``
+    builds a caller-supplied worker object whose ``step()`` is run
+    synchronously inside :meth:`poll` (return ``False`` to die), so a
+    fake clock drives the whole replica serve loop deterministically —
+    the kill-a-worker recovery test needs no real processes.
+    ``blocks=False`` tells the serve loop that :meth:`poll` never
+    waits, so idle time must pass through its injected ``sleep``."""
+
+    blocks = False
+
+    def __init__(self, factory):
+        self._factory = factory
+        self._inbox: Dict[int, Deque] = {}
+        self._results: Deque = deque()
+        self._workers: Dict[int, object] = {}
+        self._alive: Dict[int, bool] = {}
+
+    def start_worker(self, wid: int, cfg) -> None:
+        self._inbox[wid] = deque()
+        self._alive[wid] = True
+        self._workers[wid] = self._factory(wid, cfg, self._inbox[wid],
+                                           self._results.append)
+
+    def send(self, wid: int, msg) -> None:
+        # a send to a dead worker vanishes, like a socket to a dead peer
+        if self._alive.get(wid):
+            self._inbox[wid].append(msg)
+
+    def poll(self, timeout: float = 0.0):
+        """Step every live worker once, then pop one result (or None).
+        ``timeout`` is ignored — this transport never blocks."""
+        for wid in sorted(self._workers):
+            if self._alive[wid] and self._workers[wid].step() is False:
+                self._alive[wid] = False
+                self._inbox[wid].clear()
+        return self._results.popleft() if self._results else None
+
+    def alive(self, wid: int) -> bool:
+        return self._alive.get(wid, False)
+
+    def kill(self, wid: int) -> None:
+        """Simulate an abrupt worker death: it is never stepped again
+        and its queued work is lost (the router must re-queue)."""
+        self._alive[wid] = False
+        self._inbox[wid].clear()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        pass

@@ -494,6 +494,15 @@ class FleetStats:
     def delays_s(self) -> List[float]:
         return [d for m in self.models.values() for d in m.delays_s]
 
+    def delay_ms(self, q: float) -> float:
+        """Fleet-wide queue-delay percentile over the POOLED per-model
+        samples.  Never computed by averaging per-model percentiles —
+        that is not a percentile of anything (a model serving 90% of
+        the traffic must dominate the fleet tail, not count as one
+        vote); the pooled nearest-rank value matches
+        ``numpy.percentile(pooled, q, method="inverted_cdf")``."""
+        return batching.percentile(self.delays_s, q) * 1e3
+
     @property
     def slo_attainment(self) -> float:
         """Request-weighted attainment across models with an SLO set
@@ -515,6 +524,12 @@ class FleetStats:
                  f"slo_attainment={self.slo_attainment:.3f}, "
                  f"warmup_steps={self.warmup_steps}, "
                  f"shared_constants={self.shared_constants}"]
+        if self.delays_s:
+            lines.append(
+                f"  all models pooled: queue-delay "
+                f"p50={self.delay_ms(50):.2f}ms "
+                f"p95={self.delay_ms(95):.2f}ms "
+                f"p99={self.delay_ms(99):.2f}ms")
         for name, m in self.models.items():
             if not m.batches:
                 continue

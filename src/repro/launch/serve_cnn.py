@@ -11,7 +11,7 @@ the mesh per request — and report images/s.  With multiple devices the
 batch shards over the "data" axis of the serving mesh while (row, col)
 carry the macro grid (``launch.mesh.make_serving_mesh``; DESIGN.md §7).
 
-Three serving modes:
+Four serving modes:
 
 * **fixed** (:func:`serve`) — every step serves one fixed request
   batch; ragged request batches are padded-and-masked to the plan batch
@@ -31,6 +31,12 @@ Three serving modes:
   prepared shifted-weight constants shared across each network's tiers
   (`launch/fleet.py`); per-model and aggregate effective vs padded
   images/s, queue-delay percentiles, and SLO attainment are reported.
+* **replicas** (``--replicas N``) — process-level scale-out
+  (`launch/replica.py`; DESIGN.md §12): N worker processes, each with
+  its own mesh and plan ladder (warm ``--cache-dir`` makes their
+  cold-start cheap), behind a least-loaded router with heartbeat-based
+  worker recovery; aggregate + per-replica effective images/s and
+  pooled queue-delay percentiles are reported.
 
     python -m repro.launch.serve_cnn --net cnn8 --batch 8 --steps 20 \
         --p-max 4 --cache-dir /tmp/mapping-cache
@@ -38,6 +44,9 @@ Three serving modes:
         --max-delay-ms 2 --arrival-rate 500 --requests 64
     python -m repro.launch.serve_cnn --fleet cnn8,inception,densenet40 \
         --max-batch 4 --arrival-rate 200 --requests 48 --slo-ms 50
+    python -m repro.launch.serve_cnn --net cnn8 --replicas 2 \
+        --max-batch 4 --max-delay-ms 2 --requests 64 \
+        --cache-dir /tmp/mapping-cache
 
 Prints ``serve/...`` (and per-tier ``serve_dyn/...``) CSV rows per the
 benchmark harness contract plus a human-readable summary (search time,
@@ -198,6 +207,7 @@ def serve_dynamic(net_mapping, requests: Sequence[Tuple[float, int]], *,
                   tiers: Optional[Sequence[int]] = None,
                   policy="mapped", warmup: int = 1, seed: int = 0,
                   donate: Optional[bool] = None,
+                  adaptive_delay: bool = False,
                   lookahead: Optional[int] = None,
                   block: Optional[str] = None,
                   vmem_budget: Optional[int] = None,
@@ -217,7 +227,10 @@ def serve_dynamic(net_mapping, requests: Sequence[Tuple[float, int]], *,
 
     ``warmup`` forwards per tier run before the clock starts (0 honored:
     compile time then lands in the measurement).  ``donate=None`` →
-    donate input buffers whenever the plan's platform supports it."""
+    donate input buffers whenever the plan's platform supports it.
+    ``adaptive_delay`` swaps the fixed coalescing delay for the
+    load-proportional `batching.AdaptiveDelay` policy (deep backlog →
+    drain immediately; idle → wait up to ``max_delay_ms``)."""
     import jax
     import numpy as np
     from repro.exec import donation_supported, execute_plan
@@ -261,7 +274,10 @@ def serve_dynamic(net_mapping, requests: Sequence[Tuple[float, int]], *,
     # the coalescer caps batches at the CALLER's max_batch (the
     # documented "largest coalesced batch"); the ladder's top tier may
     # sit above it when the mesh data axis pads it up
-    co = batching.Coalescer(max_batch, max_delay_ms / 1e3)
+    delay_policy = (batching.AdaptiveDelay(max_delay_ms / 1e3, max_batch)
+                    if adaptive_delay else None)
+    co = batching.Coalescer(max_batch, max_delay_ms / 1e3,
+                            delay_policy=delay_policy)
     # stable sort on TIME ONLY: a plain sorted() would order tied
     # timestamps (every backlogged stream) by rows, silently reordering
     # the FIFO the coalescer promises to preserve
@@ -317,10 +333,15 @@ def _print_dynamic(net: str, s: batching.DynamicServeStats, *, tag: str,
               f"batches={ts.batches};"
               f"p50_ms={ts.delay_ms(50):.2f};p95_ms={ts.delay_ms(95):.2f};"
               f"p99_ms={ts.delay_ms(99):.2f}")
+    # aggregate percentiles over the POOLED per-tier samples — never an
+    # average of the per-tier p50/p95/p99 printed above
+    pooled = (f"p50_ms={s.delay_ms(50):.2f};p95_ms={s.delay_ms(95):.2f};"
+              f"p99_ms={s.delay_ms(99):.2f};" if s.delays_s else "")
     print(f"serve_dyn/{net}/all,"
           f"{s.wall_s / max(s.request_images, 1) * 1e6:.1f},"
           f"images_per_s={s.images_per_s:.1f};"
           f"padded_images_per_s={s.padded_images_per_s:.1f};"
+          f"{pooled}"
           f"tiers={'/'.join(str(t) for t in sorted(s.tiers))};"
           f"plan_compiles={compiles};mesh={tag};"
           f"max_batch={max_batch};max_delay_ms={max_delay_ms};"
@@ -356,10 +377,16 @@ def _print_fleet(stats, *, tag: str, max_batch: int, max_delay_ms: float,
               f"p95_ms={batching.percentile(ds, 95)*1e3:.2f};"
               f"p99_ms={batching.percentile(ds, 99)*1e3:.2f};"
               f"slo_attainment={ms.slo_attainment:.3f}")
+    # fleet-wide percentiles over the POOLED per-model delay samples —
+    # never an average of the per-model percentiles printed above
+    pooled = (f"p50_ms={stats.delay_ms(50):.2f};"
+              f"p95_ms={stats.delay_ms(95):.2f};"
+              f"p99_ms={stats.delay_ms(99):.2f};" if stats.delays_s else "")
     print(f"serve_fleet/all,"
           f"{stats.wall_s / max(stats.request_images, 1) * 1e6:.1f},"
           f"images_per_s={stats.images_per_s:.1f};"
           f"padded_images_per_s={stats.padded_images_per_s:.1f};"
+          f"{pooled}"
           f"models={'/'.join(stats.models)};"
           f"slo_attainment={stats.slo_attainment:.3f};mesh={tag};"
           f"max_batch={max_batch};max_delay_ms={max_delay_ms};"
@@ -432,6 +459,63 @@ def _main_fleet(args) -> None:
                  max_delay_ms=max_delay_ms, st=st)
 
 
+def _print_replicas(net: str, rs, *, n: int, max_batch: int,
+                    max_delay_ms: float) -> None:
+    """Human summary + harness CSV rows for a multi-replica run: one
+    ``serve_replica/<net>/w<i>`` row per worker, one aggregate."""
+    print(rs.describe())
+    for wid in sorted(rs.workers):
+        v = rs.workers[wid]
+        if not v.batches and v.alive:
+            continue
+        print(f"serve_replica/{net}/w{wid},"
+              f"{v.exec_s / max(v.batches, 1) * 1e6:.1f},"
+              f"requests={v.served_requests};images={v.served_rows};"
+              f"batches={v.batches};alive={int(v.alive)};"
+              f"startup_ms={v.startup_s*1e3:.1f};"
+              f"table_builds={v.table_misses};disk_hits={v.disk_hits}")
+    pooled = (f"p50_ms={rs.delay_ms(50):.2f};p95_ms={rs.delay_ms(95):.2f};"
+              f"p99_ms={rs.delay_ms(99):.2f};" if rs.delays_s else "")
+    print(f"serve_replica/{net}/all,"
+          f"{rs.wall_s / max(rs.request_images, 1) * 1e6:.1f},"
+          f"images_per_s={rs.images_per_s:.1f};"
+          f"padded_images_per_s={rs.padded_images_per_s:.1f};"
+          f"{pooled}"
+          f"replicas={n};deaths={rs.deaths};requeued={rs.requeued};"
+          f"duplicate_serves={rs.duplicate_serves};"
+          f"max_batch={max_batch};max_delay_ms={max_delay_ms}")
+
+
+def _main_replicas(args) -> None:
+    """``--replicas N``: spawn N worker processes (each mapping and
+    compiling behind the shared disk cache), route a Poisson trace
+    through the least-loaded dispatcher, report aggregate and
+    per-replica rates (`launch/replica.serve_replicas`)."""
+    from .replica import WorkerConfig, serve_replicas
+    max_batch = args.max_batch or args.batch
+    max_delay_ms = 2.0 if args.max_delay_ms is None else args.max_delay_ms
+    max_request = args.max_request or min(4, max_batch)
+    trace = poisson_arrivals(args.requests, args.arrival_rate, max_request,
+                             seed=args.seed)
+    cfg = WorkerConfig(
+        net=args.net, array=(args.ar, args.ac), alg=args.alg,
+        grid=(args.grid.r, args.grid.c) if args.grid is not None else None,
+        p_max=args.p_max, max_batch=max_batch, max_delay_ms=max_delay_ms,
+        adaptive_delay=args.adaptive_delay, policy=args.policy,
+        seed=args.seed, cache_dir=args.cache_dir, warmup=args.warmup,
+        use_mesh=not args.no_mesh,
+        donate=False if args.no_donate else None,
+        xla_host_devices=args.worker_devices)
+    print(f"{args.net} [{args.alg}] replicas={args.replicas} "
+          f"max_batch={max_batch} max_delay_ms={max_delay_ms} "
+          f"requests={args.requests} rate={args.arrival_rate}/s")
+    rs = serve_replicas(trace, cfg, args.replicas,
+                        dead_after_s=args.dead_after_ms / 1e3,
+                        kill_worker=args.kill_worker)
+    _print_replicas(args.net, rs, n=args.replicas, max_batch=max_batch,
+                    max_delay_ms=max_delay_ms)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--net", default="cnn8", choices=sorted(networks.NETWORKS))
@@ -489,6 +573,29 @@ def main(argv=None) -> None:
     dyn.add_argument("--max-request", type=int, default=None,
                      help="largest rows per ragged request (default: "
                           "min(4, max-batch))")
+    dyn.add_argument("--adaptive-delay", action="store_true",
+                     help="scale the coalescing delay with queue depth "
+                          "(deep backlog drains immediately, an idle "
+                          "queue waits up to --max-delay-ms)")
+    rep = ap.add_argument_group(
+        "multi-replica serving (process scale-out; enabled by --replicas)")
+    rep.add_argument("--replicas", type=int, default=None,
+                     help="spawn this many worker processes, each with "
+                          "its own mesh + plan ladder, behind a "
+                          "least-loaded router (reuses the dynamic-"
+                          "batching knobs per worker)")
+    rep.add_argument("--dead-after-ms", type=float, default=5000.0,
+                     help="heartbeat deadline: a worker silent this "
+                          "long is declared dead and its in-flight "
+                          "requests re-queued to survivors")
+    rep.add_argument("--kill-worker", type=int, default=None,
+                     help="crash-inject: kill this worker id once it "
+                          "has work in flight (recovery demo — the run "
+                          "must still serve every request exactly once)")
+    rep.add_argument("--worker-devices", type=int, default=None,
+                     help="force this many XLA host devices in each "
+                          "worker (workers own their meshes; parent "
+                          "device count does not apply)")
     flt = ap.add_argument_group(
         "fleet serving (multi-model; enabled by --fleet)")
     flt.add_argument("--fleet", default=None,
@@ -514,6 +621,10 @@ def main(argv=None) -> None:
 
     if args.fleet is not None:
         _main_fleet(args)
+        return
+
+    if args.replicas is not None:
+        _main_replicas(args)
         return
 
     mapping, search_s = map_for_serving(
@@ -555,6 +666,7 @@ def main(argv=None) -> None:
                           max_delay_ms=args.max_delay_ms, mesh=mesh,
                           tiers=tiers, policy=policy, warmup=args.warmup,
                           seed=args.seed, donate=donate,
+                          adaptive_delay=args.adaptive_delay,
                           lookahead=lookahead, block=block,
                           vmem_budget=vmem_budget)
         compiles = sum(compile_counts(net=mapping).values())

@@ -33,25 +33,44 @@ class StragglerPolicy:
 
 
 class HeartbeatMonitor:
-    """Deadline-based liveness + straggler detection over step reports."""
+    """Deadline-based liveness + straggler detection over step reports.
+
+    Two kinds of signal: :meth:`beat` is liveness only (the serving
+    tier's idle heartbeats — they must not dilute the straggler step
+    statistics with zero-length samples), :meth:`report` is a completed
+    step with its duration (feeds both liveness and the straggler
+    medians).  :meth:`forget` retires a worker that was declared dead
+    so it stops being re-reported — the replica router
+    (`launch/replica.py`) re-queues its work exactly once."""
 
     def __init__(self, n_workers: int, *, dead_after_s: float = 60.0,
-                 policy: StragglerPolicy = StragglerPolicy(),
+                 policy: Optional[StragglerPolicy] = None,
                  clock: Callable[[], float] = time.monotonic):
         self.n = n_workers
         self.dead_after = dead_after_s
-        self.policy = policy
+        self.policy = policy or StragglerPolicy()
         self.clock = clock
         self.last_seen = {w: clock() for w in range(n_workers)}
         self.durations: Dict[int, List[float]] = {w: []
                                                   for w in range(n_workers)}
 
+    def beat(self, worker: int) -> None:
+        """Liveness-only heartbeat: refresh the deadline, record no
+        step duration."""
+        self.last_seen[worker] = self.clock()
+
     def report(self, worker: int, step_duration_s: float) -> None:
         self.last_seen[worker] = self.clock()
-        d = self.durations[worker]
+        d = self.durations.setdefault(worker, [])
         d.append(step_duration_s)
         if len(d) > self.policy.window:
             d.pop(0)
+
+    def forget(self, worker: int) -> None:
+        """Retire a worker (declared dead and handled): it no longer
+        appears in :meth:`dead_workers` or the straggler scan."""
+        self.last_seen.pop(worker, None)
+        self.durations.pop(worker, None)
 
     def dead_workers(self) -> List[int]:
         now = self.clock()

@@ -355,3 +355,131 @@ def test_execute_plan_donate_falls_back_cleanly_on_cpu():
     y_donate = execute_plan(plan, ks, x, donate=True)
     assert bool(jnp.all(y_plain == y_donate))
     assert bool(jnp.all(x == x + 0))     # buffer not consumed on CPU
+
+
+# ---------------------------------------------------------------------------
+# Adaptive delay (load-proportional coalescing) + pooled percentiles
+# ---------------------------------------------------------------------------
+
+def test_adaptive_delay_scales_with_queue_depth():
+    """The policy interpolates linearly: empty queue waits the full
+    cap, a queue at/above ref_rows drains immediately."""
+    from repro.launch.batching import AdaptiveDelay
+    pol = AdaptiveDelay(max_delay_s=0.010, ref_rows=8)
+    assert pol(0) == pytest.approx(0.010)
+    assert pol(4) == pytest.approx(0.005)
+    assert pol(8) == 0.0
+    assert pol(100) == 0.0               # clamped, never negative
+    with pytest.raises(ValueError, match="ref_rows"):
+        AdaptiveDelay(0.01, 0)
+    with pytest.raises(ValueError, match="max_delay_s"):
+        AdaptiveDelay(-1.0, 4)
+
+
+def test_coalescer_adaptive_delay_moves_deadline_earlier():
+    """With a delay policy the deadline is re-derived from LIVE queue
+    depth on every call: the same oldest arrival expires sooner as the
+    backlog deepens — and a deep backlog becomes ready immediately."""
+    from repro.launch.batching import AdaptiveDelay
+    co = Coalescer(max_batch=8, max_delay_s=0.010,
+                   delay_policy=AdaptiveDelay(0.010, ref_rows=8))
+    co.push(1, now=0.0)
+    # 1 queued row of 8: deadline ~ 0 + 10ms * (1 - 1/8)
+    assert co.next_deadline() == pytest.approx(0.010 * 7 / 8)
+    co.push(3, now=0.001)                # depth 4 -> delay halves
+    assert co.next_deadline() == pytest.approx(0.010 * 4 / 8)
+    assert not co.ready(0.004)
+    assert co.ready(0.005)
+    co2 = Coalescer(max_batch=8, max_delay_s=0.010,
+                    delay_policy=AdaptiveDelay(0.010, ref_rows=4))
+    co2.push(2, now=0.0)
+    co2.push(2, now=0.0)                 # depth == ref_rows: drain now
+    assert co2.effective_delay_s() == 0.0
+    assert co2.ready(0.0)
+    assert [r.rows for r in co2.pop(0.0)] == [2, 2]
+
+
+def test_coalescer_delay_policy_clamped_by_max_delay():
+    """A policy may never extend the wait beyond the configured cap
+    (or below zero) — the cap is the latency contract."""
+    co = Coalescer(max_batch=8, max_delay_s=0.010,
+                   delay_policy=lambda rows: 99.0)
+    co.push(1, now=0.0)
+    assert co.effective_delay_s() == pytest.approx(0.010)
+    assert co.next_deadline() == pytest.approx(0.010)
+    co_neg = Coalescer(max_batch=8, max_delay_s=0.010,
+                       delay_policy=lambda rows: -5.0)
+    co_neg.push(1, now=0.0)
+    assert co_neg.effective_delay_s() == 0.0
+    assert co_neg.ready(0.0)
+
+
+def test_serve_dynamic_adaptive_delay_virtual_time():
+    """End-to-end through serve_dynamic on a virtual clock: with load
+    queued, the adaptive policy launches earlier than the fixed one
+    (50ms * (1 - 3/8) vs the full 50ms cap), so the pooled queue-delay
+    p50 shrinks; the trailing arrival force-drains either way."""
+    from repro.launch.serve_cnn import serve_dynamic
+
+    def virtual(adaptive):
+        t = [0.0]
+
+        def clock():
+            return t[0]
+
+        def sleep(dt):
+            t[0] += dt
+        net = _small_net()
+        # 3 early singles never fill max_batch=8: the fixed policy
+        # holds them until the last arrival force-drains the queue at
+        # t=45ms, the adaptive one serves them at 50ms * (1 - 3/8)
+        reqs = [(0.0, 1)] * 3 + [(0.045, 1)]
+        s = serve_dynamic(net, reqs, max_batch=8, max_delay_ms=50.0,
+                          mesh=None, warmup=1, adaptive_delay=adaptive,
+                          clock=clock, sleep=sleep)
+        assert s.request_images == 4
+        return s
+
+    fast, slow = virtual(True), virtual(False)
+    assert fast.delay_ms(50) == pytest.approx(50.0 * (1 - 3 / 8))
+    assert slow.delay_ms(50) == pytest.approx(45.0)
+    assert fast.delay_ms(50) < slow.delay_ms(50)
+
+
+def test_dynamic_stats_pooled_percentiles_match_numpy():
+    """Aggregate queue-delay percentiles pool ALL per-tier samples and
+    match numpy on the pooled vector — never the average of per-tier
+    percentiles, which is a different (wrong) number here."""
+    t1 = TierStats(plan_batch=1)
+    t1.delays_s = [0.001, 0.002, 0.003, 0.100]
+    t4 = TierStats(plan_batch=4)
+    t4.delays_s = [0.004, 0.005, 0.200, 0.300, 0.400]
+    s = DynamicServeStats(tiers={1: t1, 4: t4}, request_images=9,
+                          padded_images=17, wall_s=1.0, warmup_steps=0)
+    pooled = t1.delays_s + t4.delays_s
+    for q in (50, 95, 99):
+        expect = float(np.percentile(pooled, q,
+                                     method="inverted_cdf")) * 1e3
+        assert s.delay_ms(q) == pytest.approx(expect)
+        avg_of_percentiles = (t1.delay_ms(q) + t4.delay_ms(q)) / 2
+        assert s.delay_ms(q) != pytest.approx(avg_of_percentiles)
+    assert "pooled" in s.describe()
+
+
+def test_fleet_stats_pooled_percentiles_match_numpy():
+    """FleetStats.delay_ms pools per-model samples the same way."""
+    from repro.launch.fleet import FleetStats, ModelStats
+    ma = ModelStats(name="a", slo_ms=None)
+    ma.tiers[1] = TierStats(plan_batch=1)
+    ma.tiers[1].delays_s = [0.010, 0.020, 0.030]
+    mb = ModelStats(name="b", slo_ms=None)
+    mb.tiers[2] = TierStats(plan_batch=2)
+    mb.tiers[2].delays_s = [0.001, 0.002, 0.500, 0.600]
+    fs = FleetStats(models={"a": ma, "b": mb}, wall_s=1.0,
+                    warmup_steps=0, shared_constants=True)
+    pooled = ma.tiers[1].delays_s + mb.tiers[2].delays_s
+    for q in (50, 95, 99):
+        expect = float(np.percentile(pooled, q,
+                                     method="inverted_cdf")) * 1e3
+        assert fs.delay_ms(q) == pytest.approx(expect)
+    assert "pooled" in fs.describe()

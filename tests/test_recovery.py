@@ -1,0 +1,151 @@
+"""Fault-tolerance runtime (runtime/recovery.py) under a fake clock:
+heartbeat deadlines, liveness-only beats vs step reports, straggler
+warn/demote thresholds, retirement via forget, and elastic re-meshing
+on the surviving device count."""
+import pytest
+
+from repro.runtime.recovery import (HeartbeatMonitor, StragglerPolicy,
+                                    derive_elastic_mesh)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor: liveness
+# ---------------------------------------------------------------------------
+
+def test_dead_after_detection():
+    """A worker silent past dead_after_s is declared dead; anything
+    that beat within the deadline is not."""
+    clk = FakeClock()
+    mon = HeartbeatMonitor(3, dead_after_s=1.0, clock=clk)
+    assert mon.dead_workers() == []
+    clk.advance(0.9)
+    mon.beat(1)                       # refresh worker 1 only
+    assert mon.dead_workers() == []   # nobody past the deadline yet
+    clk.advance(0.2)                  # t=1.1: workers 0,2 silent 1.1s
+    assert mon.dead_workers() == [0, 2]
+    clk.advance(1.0)                  # t=2.1: worker 1 silent 1.2s
+    assert mon.dead_workers() == [0, 1, 2]
+
+
+def test_beat_is_liveness_only_report_feeds_durations():
+    """beat() refreshes the deadline without polluting the straggler
+    step statistics; report() does both."""
+    clk = FakeClock()
+    mon = HeartbeatMonitor(2, dead_after_s=1.0, clock=clk)
+    for _ in range(5):
+        mon.beat(0)
+    mon.report(1, 0.25)
+    assert mon.durations[0] == []          # idle heartbeats left no steps
+    assert mon.durations[1] == [0.25]
+    clk.advance(1.5)
+    assert mon.dead_workers() == [0, 1]
+    mon.beat(0)
+    mon.report(1, 0.3)
+    assert mon.dead_workers() == []        # both signals refresh liveness
+
+
+def test_forget_retires_dead_worker():
+    """After forget() a dead worker stops being re-reported — the
+    router re-queues its work exactly once — and its step history
+    leaves the straggler scan."""
+    clk = FakeClock()
+    mon = HeartbeatMonitor(2, dead_after_s=1.0, clock=clk)
+    mon.report(0, 0.1)
+    clk.advance(2.0)
+    assert mon.dead_workers() == [0, 1]
+    mon.forget(0)
+    assert mon.dead_workers() == [1]
+    assert 0 not in mon.durations and 0 not in mon.last_seen
+    mon.forget(0)                          # idempotent
+    assert mon.dead_workers() == [1]
+
+
+def test_report_window_bounds_history():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(1, policy=StragglerPolicy(window=3), clock=clk)
+    for i in range(10):
+        mon.report(0, float(i))
+    assert mon.durations[0] == [7.0, 8.0, 9.0]
+
+
+# ---------------------------------------------------------------------------
+# Straggler policy
+# ---------------------------------------------------------------------------
+
+def _fed_monitor(per_worker):
+    clk = FakeClock()
+    mon = HeartbeatMonitor(len(per_worker), clock=clk)
+    for w, durs in enumerate(per_worker):
+        for d in durs:
+            mon.report(w, d)
+    return mon
+
+
+def test_straggler_warn_and_demote_thresholds():
+    """Per-worker median vs fleet median: > warn_factor x -> warn,
+    > demote_factor x -> demote (defaults 1.5x / 3x)."""
+    mon = _fed_monitor([
+        [1.0] * 5,          # healthy: median 1.0
+        [1.0] * 5,
+        [2.0] * 3,          # 2x fleet median -> warn
+        [4.0] * 3,          # 4x -> demote
+    ])
+    out = mon.stragglers()
+    assert out == {2: "warn", 3: "demote"}
+
+
+def test_straggler_needs_history():
+    """No step reports anywhere -> no stragglers (median undefined);
+    a worker with no history is skipped, not flagged."""
+    clk = FakeClock()
+    mon = HeartbeatMonitor(2, clock=clk)
+    assert mon.stragglers() == {}
+    mon.report(0, 1.0)
+    assert 1 not in mon.stragglers()
+
+
+def test_straggler_policy_factors_respected():
+    mon = _fed_monitor([[1.0] * 6, [1.6] * 4])
+    mon.policy = StragglerPolicy(warn_factor=2.0, demote_factor=4.0)
+    assert mon.stragglers() == {}          # 1.6x < 2x: healthy now
+    mon.policy = StragglerPolicy(warn_factor=1.1, demote_factor=1.5)
+    assert mon.stragglers()[1] == "demote"
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-mesh
+# ---------------------------------------------------------------------------
+
+def test_derive_elastic_mesh_power_of_two_data_axis():
+    p = derive_elastic_mesh(8, model_parallel=2)
+    assert p.shape == (4, 2) and p.axes == ("data", "model")
+    assert p.dropped == 0
+    p = derive_elastic_mesh(7, model_parallel=2)   # 7//2=3 -> floor to 2
+    assert p.shape == (2, 2) and p.dropped == 3
+    p = derive_elastic_mesh(6, model_parallel=1)
+    assert p.shape == (4, 1) and p.dropped == 2
+
+
+def test_derive_elastic_mesh_survivor_counts():
+    """Walking survivors down re-meshes monotonically: the data axis
+    never grows as workers die."""
+    sizes = [derive_elastic_mesh(n, model_parallel=2).shape[0]
+             for n in range(8, 1, -1)]
+    assert sizes == sorted(sizes, reverse=True)
+    assert derive_elastic_mesh(2, model_parallel=2).shape == (1, 2)
+
+
+def test_derive_elastic_mesh_raises_below_model_parallel():
+    with pytest.raises(RuntimeError, match="model_parallel"):
+        derive_elastic_mesh(1, model_parallel=2)
