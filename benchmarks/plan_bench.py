@@ -50,13 +50,18 @@ def _time_pair(fn_a, fn_b, rounds: int = 5):
 
 def _rows(label: str, plan, us_loop: float, us_fused: float):
     n = len(plan.layers)
+    # memory-pass estimate (exec/memory.py) of training through this
+    # plan unremat'd, scaled to the bench batch — the frontier's x-axis,
+    # inspectable without running the trainer (train_bench measures it)
+    mem_mb = plan.unremat_peak_bytes * BATCH / 1e6
     return [
         Row(f"plan/{label}/loop", us_loop,
-            f"dispatches={n};batch={BATCH}"),
+            f"dispatches={n};batch={BATCH};mem_mb={mem_mb:.1f}"),
         Row(f"plan/{label}/fused", us_fused,
             f"dispatches={plan.host_dispatches};"
             f"speedup={us_loop / us_fused:.2f};"
-            f"steps={plan.total_steps};batch={BATCH}"),
+            f"steps={plan.total_steps};batch={BATCH};"
+            f"mem_mb={mem_mb:.1f}"),
     ]
 
 

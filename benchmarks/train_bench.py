@@ -1,0 +1,156 @@
+"""Training memory/throughput frontier: remat off vs ``"auto"``.
+
+The ISSUE 10 acceptance quantity: on densenet40 — the bench net whose
+concat-heavy forward carries the deepest live-activation stack — train
+through the compiled plan (`repro.cnn.train.train_plan`) with
+rematerialization off and with ``remat="auto"``, and report both sides
+of the trade:
+
+* ``mem_mb`` — the memory pass's peak-live estimate of the plan that
+  actually ran (exec/memory.py, `NetworkPlan.peak_bytes`);
+* ``steps_s`` — measured optimizer steps/s, median over the post-warmup
+  steps (the first step holds the jit compile and is dropped).
+
+The auto row must show peak-estimate ``reduction >= 2`` against its own
+``unremat_mb`` and ``slowdown < 2`` against the off row: recompute buys
+the memory back for less than one extra forward per step.
+
+    python -m benchmarks.train_bench --smoke          # the CI run
+    python -m benchmarks.train_bench --full
+    python -m benchmarks.train_bench --smoke --ledger BENCH_train.json \
+        --pr "PR 10"
+
+Prints the harness CSV (``name,usec,extras``) to stdout — CI tees it
+into ``bench-out/train_bench.csv``.  Exposes ``run(full)`` returning
+`benchmarks.common.Row`s like every bench module, though (like
+replica_bench) it is not in run.py's default MODULES: two full
+densenet40 train compiles are minutes, not the seconds budget
+``python -m benchmarks.run`` holds to.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import statistics
+
+from repro.core import ArrayConfig, MacroGrid, map_net, networks
+from repro.cnn.train import train_plan
+from repro.exec.remat import ENV_BUDGET
+
+from .common import Row
+
+NET = "densenet40"
+ARRAY = ArrayConfig(64, 64)
+GRID = MacroGrid(2, 2)
+
+
+def _config(full: bool) -> dict:
+    # batch >= 4 so activations (not the shifted-weight constants)
+    # dominate the estimate — below that the 3-segment split cannot
+    # reach the 2x reduction the frontier exists to show
+    return (dict(steps=6, batch=8, accum=2, lr=1e-3) if full
+            else dict(steps=4, batch=4, accum=1, lr=1e-3))
+
+
+def _train(net, remat, cfg: dict):
+    times: list = []
+    losses: list = []
+    r = train_plan(net, steps=cfg["steps"], batch=cfg["batch"],
+                   accum=cfg["accum"], lr=cfg["lr"], remat=remat,
+                   losses=losses, step_times=times)
+    steady = times[1:] or times     # times[0] holds the jit compile
+    return r, statistics.median(steady), losses
+
+
+def run(full: bool = False):
+    """Harness-shaped entry: one row per remat mode, auto carrying the
+    frontier numbers (reduction vs its own unremat estimate, slowdown
+    vs the off row)."""
+    cfg = _config(full)
+    net = map_net(NET, networks.NETWORKS[NET](), ARRAY, "TetrisG-SDK",
+                  GRID)
+    # the trainer's forced-budget refusal (REPRO_TRAIN_MEM_BUDGET) would
+    # abort the off leg — the bench measures the frontier itself, so it
+    # runs budget-free and restores the caller's env after
+    forced = os.environ.pop(ENV_BUDGET, None)
+    try:
+        rows = []
+        base_s = None
+        for tag, remat in (("off", None), ("auto", "auto")):
+            r, step_s, losses = _train(net, remat, cfg)
+            extras = (f"mem_mb={r.peak_mb:.1f};"
+                      f"unremat_mb={r.unremat_peak_mb:.1f};"
+                      f"segments={r.segments};"
+                      f"steps_s={1.0 / step_s:.3f};"
+                      f"steps={r.steps};batch={r.batch};"
+                      f"accum={r.accum};donated={int(r.donated)};"
+                      f"loss={losses[0]:.3f}->{losses[-1]:.3f}")
+            if tag == "off":
+                base_s = step_s
+            else:
+                extras += (f";reduction="
+                           f"{r.unremat_peak_mb / r.peak_mb:.2f}"
+                           f";slowdown={step_s / base_s:.2f}")
+            rows.append(Row(f"train/{NET}/remat_{tag}", step_s * 1e6,
+                            extras))
+        return rows
+    finally:
+        if forced is not None:
+            os.environ[ENV_BUDGET] = forced
+
+
+def ledger_entry(rows, *, pr: str, note: str) -> dict:
+    """BENCH_train.json entry: the frontier as plain numbers — peak
+    estimates, measured steps/s, and the reduction/slowdown ratios the
+    acceptance bar reads."""
+    def kv(row):
+        return dict(p.split("=", 1) for p in row.derived.split(";"))
+    off = next(r for r in rows if r.name.endswith("/remat_off"))
+    auto = next(r for r in rows if r.name.endswith("/remat_auto"))
+    return {
+        "pr": pr,
+        "note": note,
+        "net": NET,
+        "batch": int(kv(off)["batch"]),
+        "accum": int(kv(off)["accum"]),
+        "steps": int(kv(off)["steps"]),
+        "unremat_peak_mb": float(kv(auto)["unremat_mb"]),
+        "off_peak_mb": float(kv(off)["mem_mb"]),
+        "auto_peak_mb": float(kv(auto)["mem_mb"]),
+        "auto_segments": int(kv(auto)["segments"]),
+        "off_steps_per_s": float(kv(off)["steps_s"]),
+        "auto_steps_per_s": float(kv(auto)["steps_s"]),
+        "peak_reduction": float(kv(auto)["reduction"]),
+        "slowdown": float(kv(auto)["slowdown"]),
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--smoke", action="store_true",
+                      help="batch 4, 4 steps per mode (the CI run)")
+    mode.add_argument("--full", action="store_true",
+                      help="batch 8, accum 2, 6 steps per mode")
+    ap.add_argument("--csv", default=None,
+                    help="also write the CSV to this path")
+    ap.add_argument("--ledger", default=None,
+                    help="append a BENCH_train.json ledger entry here")
+    ap.add_argument("--pr", default="",
+                    help="ledger entry tag for --ledger")
+    args = ap.parse_args(argv)
+
+    rows = run(full=args.full)
+    text = "\n".join(r.csv() for r in rows) + "\n"
+    print(text, end="")
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write(text)
+    if args.ledger:
+        from repro.tune.report import append_trajectory
+        append_trajectory(args.ledger, ledger_entry(
+            rows, pr=args.pr, note="smoke" if args.smoke else "full"))
+
+
+if __name__ == "__main__":
+    main()

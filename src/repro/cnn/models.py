@@ -23,6 +23,7 @@ the mesh-fit decisions; DESIGN.md §8).
 """
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass
 from typing import Dict, Optional, Sequence, Tuple
@@ -93,15 +94,22 @@ def _pad(x: jnp.ndarray, target: int) -> jnp.ndarray:
 
 def apply_cnn(params: Dict, cfg: CNNConfig, x: jnp.ndarray,
               mappings: Optional[Sequence[LayerMapping]] = None,
-              executor: Optional[str] = None, mesh=None) -> jnp.ndarray:
+              executor: Optional[str] = None, mesh=None,
+              remat=None) -> jnp.ndarray:
     """x: (b, in_ch, H, W) -> logits (b, num_classes).
 
     ``executor`` selects the conv path (module docstring); None resolves
     to "cim" when mappings are given, else "reference".  Mapping-driven
     executors resolve to a layerwise execution plan (repro.exec) — one
-    compiled dispatch table per (mappings, executor, mesh).  ``mesh`` is
-    an optional ("row", "col") device mesh for the mapped executor
-    (launch.mesh.make_macro_mesh)."""
+    compiled dispatch table per (mappings, executor, mesh, batch; the
+    batch joins the key so `exec.plan.compile_counts` counts one plan
+    per distinct input shape — the train loop's pad-and-mask contract).
+    ``mesh`` is an optional ("row", "col") device mesh for the mapped
+    executor (launch.mesh.make_macro_mesh).  ``remat`` asks the plan's
+    segment pass for checkpoint boundaries (`compile_plan(remat=...)`;
+    layerwise plans may cut at any conv) and wraps each segment's convs
+    + pooling in `jax.checkpoint` — mapping-driven executors only: the
+    lax.conv fast path has no plan to segment."""
     if executor is None:
         executor = "reference" if mappings is None else "cim"
     if executor not in ("reference", "cim", "mapped", "sdk"):
@@ -110,28 +118,45 @@ def apply_cnn(params: Dict, cfg: CNNConfig, x: jnp.ndarray,
         raise ValueError(f"executor={executor!r} needs mappings")
     plan = None
     if executor != "reference":
-        from repro.exec import apply_layer, compile_plan
+        from repro.exec import compile_plan
         net = NetworkMapping(
             name=cfg.name, algorithm=mappings[0].algorithm,
             array=mappings[0].array, layers=tuple(mappings),
             grid=mappings[0].grid)
         plan = compile_plan(net, executor_policy=_PLAN_POLICY[executor],
-                            mesh=mesh,
-                            batch=x.shape[0] if mesh is not None else None,
-                            chained=False)
-    g = cfg.group
-    for i, c in enumerate(cfg.convs):
-        x = _pad(x, c.i_w)
-        w, b = params["convs"][i]["w"], params["convs"][i]["b"]
-        if plan is not None:
-            y = apply_layer(plan, i, x, w, mesh=mesh)
+                            mesh=mesh, batch=x.shape[0],
+                            chained=False, remat=remat)
+    elif remat is not None:
+        raise ValueError("remat needs a mapping-driven executor — the "
+                         "plan's segment pass owns the boundaries")
+
+    def segment(x, seg_params, lo, hi):
+        from repro.exec import apply_layer
+        for i in range(lo, hi):
+            c = cfg.convs[i]
+            x = _pad(x, c.i_w)
+            w, b = seg_params[i - lo]["w"], seg_params[i - lo]["b"]
+            if plan is not None:
+                y = apply_layer(plan, i, x, w, mesh=mesh)
+            else:
+                y = reference_conv2d(c, x, w, groups=cfg.group)
+            x = jax.nn.relu(y + b[None, :, None, None])
+            if i in cfg.pool_after:
+                x = jax.lax.reduce_window(
+                    x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2),
+                    "VALID")
+        return x
+
+    spans = plan.spans if plan is not None else ((0, len(cfg.convs)),)
+    for lo, hi in spans:
+        seg_params = params["convs"][lo:hi]
+        if len(spans) > 1:
+            # remat: the backward re-runs this conv slice from its
+            # boundary carry instead of saving every layer's residuals
+            x = jax.checkpoint(functools.partial(segment, lo=lo, hi=hi))(
+                x, seg_params)
         else:
-            y = reference_conv2d(c, x, w, groups=g)
-        x = jax.nn.relu(y + b[None, :, None, None])
-        if i in cfg.pool_after:
-            x = jax.lax.reduce_window(
-                x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2),
-                "VALID")
+            x = segment(x, seg_params, lo, hi)
     feats = x.mean(axis=(2, 3))                       # GAP
     head = params["head"]
     if head is None:

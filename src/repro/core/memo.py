@@ -106,12 +106,12 @@ SCHEMA_VERSION = 2      # 2: op-kind axis on layer specs (ISSUE 8)
 #: Separate version for compiled NetworkPlan entries (:func:`cached_plan`)
 #: — bump when the plan IR (exec/plan.py dataclasses) or the compile
 #: semantics change without the mapping schema moving.
-PLAN_VERSION = 3        # 3: GlueSpec glue + "matmul" executor (ISSUE 8)
+PLAN_VERSION = 4        # 4: memory estimates + remat segments (ISSUE 10)
 
 #: Version for persisted autotuner winners (:func:`load_tuning` /
 #: :func:`store_tuning`) — bump when the TunedConfig schema or the
 #: tuning-key layout (repro/tune) changes.
-TUNE_VERSION = 1
+TUNE_VERSION = 2        # 2: Candidate.remat field (ISSUE 10)
 
 _ENV_VAR = "REPRO_MAPPING_CACHE"
 _MAX_BYTES_ENV_VAR = "REPRO_MAPPING_CACHE_MAX_BYTES"

@@ -17,16 +17,20 @@ docstrings of exec/plan.py / exec/run.py.
 from .constants import PlanConstants, constant_counts, prepare_constants
 from .glue import (ACTIVATIONS, GLUE_KINDS, GlueSpec, attention_stage,
                    center_crop, fit_spatial, layernorm, resolve_chain)
-from .plan import (EXECUTORS, LayerPlan, NetworkPlan, PolicyLike,
-                   compile_counts, compile_plan)
+from .memory import LayerMemory, network_memory, peak_bytes, total_bytes
+from .plan import (EXECUTORS, PASSES, LayerPlan, NetworkPlan, PlanDraft,
+                   PolicyLike, compile_counts, compile_plan)
+from .remat import allowed_cuts, canonical_remat, plan_segments
 from .run import (apply_layer, donation_supported, execute_layerwise,
                   execute_looped, execute_oracle, execute_plan)
 
 __all__ = [
-    "ACTIVATIONS", "GLUE_KINDS", "GlueSpec", "EXECUTORS", "LayerPlan",
-    "NetworkPlan", "PlanConstants", "PolicyLike", "apply_layer",
-    "attention_stage", "center_crop", "compile_counts", "compile_plan",
+    "ACTIVATIONS", "GLUE_KINDS", "GlueSpec", "EXECUTORS", "LayerMemory",
+    "LayerPlan", "NetworkPlan", "PASSES", "PlanConstants", "PlanDraft",
+    "PolicyLike", "allowed_cuts", "apply_layer", "attention_stage",
+    "canonical_remat", "center_crop", "compile_counts", "compile_plan",
     "constant_counts", "donation_supported", "execute_layerwise",
     "execute_looped", "execute_oracle", "execute_plan", "fit_spatial",
-    "layernorm", "prepare_constants", "resolve_chain",
+    "layernorm", "network_memory", "peak_bytes", "plan_segments",
+    "prepare_constants", "resolve_chain", "total_bytes",
 ]

@@ -10,30 +10,39 @@ logic.  `compile_plan` lowers a `NetworkMapping` **once** into a static
 per-layer plan; `execute_plan` (exec/run.py) then runs the whole forward
 as ONE jitted program.
 
-Per layer the plan fixes, at compile time:
+Compilation is a staged **pass pipeline** over a `PlanDraft` — each
+pass takes the draft and returns an updated one, so new analyses slot
+in without touching dispatch::
 
-* the **executor** — ``"reference"`` (cnn/cim_conv.py, placement-batched
-  oracle), ``"mapped"`` (cnn/mapped_net.py, macro-parallel super-steps),
-  or ``"sdk"`` (kernels/im2win_conv.py, Pallas MXU path) — selectable
-  per layer by a size/VMEM heuristic (``"auto"``) or explicit override;
-* the **super-step schedule** (`LayerSchedule`) with the steps==cycles
-  assertion evaluated here, at compile time, instead of on every
-  dispatch;
-* the **inter-layer glue** — plain chain / DenseNet concat classified
-  from channel arithmetic (exec/glue.py), so a mis-chained network fails
-  at compile, not mid-forward;
-* the **sharding decision** — whether the layer's sub-grid fits the
-  compile mesh (`macro_mesh_fits`), so dispatch never re-fits.
+    validate ─ resolve_executors ─ check_glue ─ estimate_memory
+             ─ segment ─ schedule ─ (freeze → NetworkPlan)
+
+* **validate** — batch/mesh divisibility (a ragged batch is refused
+  here: pad it first);
+* **resolve_executors** — per-layer executor legality (sdk
+  realizability, matmul op match) and the sharding decision
+  (`macro_mesh_fits`), so dispatch never re-fits;
+* **check_glue** — inter-layer glue: plain chain / DenseNet concat
+  classified from channel arithmetic (exec/glue.py) for CNNs, or the
+  mapping's explicit `GlueSpec` tuple validated by carry simulation —
+  a mis-chained network fails at compile, not mid-forward;
+* **estimate_memory** — per-layer live-activation + shifted-weight
+  byte estimates from the LayerMapping itself (exec/memory.py);
+* **segment** — rematerialization boundaries under the requested
+  peak-memory budget (exec/remat.py; concat groups never split);
+* **schedule** — the super-step schedule (`LayerSchedule`) with the
+  steps==cycles assertion evaluated here, at compile time, instead of
+  on every dispatch.
 
 Plans are frozen, hashable (static jit arguments) and picklable; they
 join the memo result/disk cache keyed on mapping + resolved policy +
-mesh shape + batch (`core/memo.cached_plan`), so a serving replica
-compiles each distinct (network, mesh, batch) once per process — or
-never, with a warm disk cache.  See DESIGN.md §8.
+mesh shape + batch + remat spec (`core/memo.cached_plan`), so a serving
+replica compiles each distinct (network, mesh, batch) once per process
+— or never, with a warm disk cache.  See DESIGN.md §8 and §13.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Callable, Optional, Sequence, Tuple, Union
 
 import jax
@@ -42,6 +51,8 @@ from repro.core import memo
 from repro.core.types import GlueSpec, NetworkMapping
 from repro.cnn.mapped_net import LayerSchedule, check_steps, layer_schedule
 from repro.launch.sharding import macro_mesh_fits
+from . import memory as memlib
+from . import remat as rematlib
 from .glue import resolve_chain
 
 #: Executors a plan can dispatch a layer to.  "matmul" is the MXU path
@@ -70,6 +81,13 @@ class LayerPlan:
     interpret: bool = False     # sdk: pallas interpret mode (off-TPU)
     block: str = "auto"         # sdk: tiling mode
     vmem_budget: int = 8 * 1024 * 1024  # sdk: resolved byte budget
+    act_bytes: int = 0          # memory pass: saved input activation
+    weight_bytes: int = 0       # memory pass: shifted-weight prep
+
+    @property
+    def mem_bytes(self) -> int:
+        """Live bytes this layer pins during an unremat'd backward."""
+        return self.act_bytes + self.weight_bytes
 
 
 @dataclass(frozen=True)
@@ -95,6 +113,11 @@ class NetworkPlan:
     #: it without monkeypatching; each value is its own plan, so
     #: changing it recompiles the fused program exactly once per value.
     lookahead: int = 1
+    #: rematerialization segments — half-open (start, end) layer ranges
+    #: chosen by the segment pass; None when remat was off (the PR-4-era
+    #: single-program shape).  `execute_plan` wraps each segment in
+    #: `jax.checkpoint` when there is more than one.
+    segments: Optional[Tuple[Tuple[int, int], ...]] = None
 
     @property
     def executors(self) -> Tuple[str, ...]:
@@ -113,15 +136,60 @@ class NetworkPlan:
         `apply_layer`) launched ``len(self.layers)``."""
         return 1
 
+    @property
+    def spans(self) -> Tuple[Tuple[int, int], ...]:
+        """The segment ranges dispatch iterates — one whole-net span
+        when the segment pass did not run / remat is off."""
+        if self.segments is not None:
+            return self.segments
+        return ((0, len(self.layers)),)
+
+    @property
+    def layer_memory(self) -> Tuple[memlib.LayerMemory, ...]:
+        return tuple(memlib.LayerMemory(lp.mapping.layer.name,
+                                        lp.act_bytes, lp.weight_bytes)
+                     for lp in self.layers)
+
+    @property
+    def peak_bytes(self) -> int:
+        """Peak live-byte estimate of training through this plan *as
+        segmented* (exec/memory.py peak model)."""
+        return memlib.peak_bytes(self.layer_memory, self.spans)
+
+    @property
+    def unremat_peak_bytes(self) -> int:
+        """What the peak would be with every layer's residuals live at
+        once — the remat-off baseline the frontier is measured against."""
+        return memlib.total_bytes(self.layer_memory)
+
     def describe(self) -> str:
         execs = ",".join(f"{lp.mapping.layer.name}:{lp.executor}"
                          for lp in self.layers)
         tag = ("x".join(f"{n}={s}" for n, s in self.mesh_axes)
                if self.mesh_axes else "vmap")
+        seg = f" segments={len(self.segments)}" if self.segments else ""
         return (f"plan[{self.net.name}] layers={len(self.layers)} "
                 f"steps={self.total_steps} mesh={tag} "
                 f"lookahead={self.lookahead} "
+                f"peak_mem={self.peak_bytes / 1e6:.1f}MB{seg} "
                 f"dispatches/forward={self.host_dispatches} ({execs})")
+
+    def describe_memory(self) -> str:
+        """Per-layer memory-pass estimates, one line per layer, with
+        segment boundaries marked — the frontier, inspectable without
+        running the trainer."""
+        starts = {s for s, _ in self.spans[1:]}
+        lines = [f"plan[{self.net.name}] "
+                 f"peak={self.peak_bytes / 1e6:.1f}MB "
+                 f"unremat={self.unremat_peak_bytes / 1e6:.1f}MB "
+                 f"segments={len(self.spans)}"]
+        for i, lp in enumerate(self.layers):
+            cut = " <- segment" if i in starts else ""
+            lines.append(
+                f"  {lp.mapping.layer.name}: act="
+                f"{lp.act_bytes / 1e6:.2f}MB weights="
+                f"{lp.weight_bytes / 1e6:.2f}MB{cut}")
+        return "\n".join(lines)
 
 
 def mesh_axes(mesh) -> Optional[Tuple[Tuple[str, int], ...]]:
@@ -181,24 +249,56 @@ def _resolve_policy(policy: PolicyLike, net: NetworkMapping, *,
     return tuple(out)
 
 
-def _compile(net: NetworkMapping, execs: Tuple[str, ...], mesh,
-             batch: Optional[int], chained: bool, interpret: bool,
-             block: str, vmem_budget: int, lookahead: int) -> NetworkPlan:
-    if (mesh is not None and "data" in mesh.axis_names
-            and batch is not None and batch % mesh.shape["data"]):
+# ---------------------------------------------------------------------------
+# the pass pipeline
+
+
+@dataclass(frozen=True)
+class PlanDraft:
+    """The intermediate the compile passes thread — compile_plan's
+    resolved inputs plus one field per analysis, each filled by its
+    pass and read by later ones.  Frozen: passes return an updated copy
+    (`dataclasses.replace`), never mutate."""
+
+    net: NetworkMapping
+    execs: Tuple[str, ...]
+    mesh: object                    # the LIVE mesh (not in the final IR)
+    batch: Optional[int]
+    chained: bool
+    interpret: bool
+    block: str
+    vmem_budget: int
+    lookahead: int
+    remat: object                   # canonical spec (exec.remat)
+    # pass products
+    use_mesh: Optional[Tuple[bool, ...]] = None        # resolve_executors
+    glue: Optional[Tuple[GlueSpec, ...]] = None        # check_glue
+    carries: Optional[Tuple[int, ...]] = None          # check_glue
+    mem: Optional[Tuple[memlib.LayerMemory, ...]] = None  # estimate_memory
+    segments: Optional[Tuple[Tuple[int, int], ...]] = None  # segment
+    schedules: Optional[Tuple[LayerSchedule, ...]] = None   # schedule
+
+
+def pass_validate(d: PlanDraft) -> PlanDraft:
+    """Whole-plan input legality (per-layer legality lives with the
+    passes that own the facts)."""
+    if (d.mesh is not None and "data" in d.mesh.axis_names
+            and d.batch is not None and d.batch % d.mesh.shape["data"]):
         # refuse rather than silently vmap the whole net: ragged batches
         # must pad to the data axis (launch.mesh.pad_to_data_axis /
         # serve_cnn pad-and-mask)
         raise ValueError(
-            f"batch {batch} does not divide the mesh data axis "
-            f"{mesh.shape['data']} — pad the batch to "
+            f"batch {d.batch} does not divide the mesh data axis "
+            f"{d.mesh.shape['data']} — pad the batch to "
             f"pad_to_data_axis(batch, mesh) or drop the data axis")
-    layers = []
-    carry_c = net.layers[0].layer.ic
-    saved: list = []                # channel widths of GlueSpec.save stack
-    for i, (m, ex) in enumerate(zip(net.layers, execs)):
+    return d
+
+
+def pass_resolve_executors(d: PlanDraft) -> PlanDraft:
+    """Executor legality per layer + the sharding decision."""
+    use = []
+    for m, ex in zip(d.net.layers, d.execs):
         lay = m.layer
-        check_steps(m)                      # steps==cycles, at compile time
         if ex == "sdk" and not _sdk_realizable(m):
             raise ValueError(
                 f"{lay.name}: executor 'sdk' runs passes/groups "
@@ -209,37 +309,117 @@ def _compile(net: NetworkMapping, execs: Tuple[str, ...], mesh,
             raise ValueError(
                 f"{lay.name}: executor 'matmul' requires op='matmul' "
                 f"(this layer is op={getattr(lay, 'op', 'conv')!r})")
-        use_mesh = (ex == "mapped"
-                    and macro_mesh_fits(mesh, m.sub_grid.r, m.sub_grid.c,
-                                        batch=batch))
-        if not chained:
-            glue = GlueSpec(kind="layerwise")
-        elif net.glue is not None:
-            glue = net.glue[i]
-            carry_c, saved = _check_explicit_glue(net, i, glue, carry_c,
+        use.append(ex == "mapped"
+                   and macro_mesh_fits(d.mesh, m.sub_grid.r, m.sub_grid.c,
+                                       batch=d.batch))
+    return replace(d, use_mesh=tuple(use))
+
+
+def pass_check_glue(d: PlanDraft) -> PlanDraft:
+    """Classify / validate inter-layer glue and the carry channel count
+    entering each layer."""
+    net = d.net
+    n = len(net.layers)
+    if not d.chained:
+        return replace(
+            d, glue=tuple(GlueSpec(kind="layerwise") for _ in range(n)),
+            carries=tuple(m.layer.ic for m in net.layers))
+    glue, carries = [], []
+    carry_c = net.layers[0].layer.ic
+    saved: list = []                # channel widths of GlueSpec.save stack
+    for i, m in enumerate(net.layers):
+        lay = m.layer
+        carries.append(carry_c)
+        if net.glue is not None:
+            spec = net.glue[i]
+            carry_c, saved = _check_explicit_glue(net, i, spec, carry_c,
                                                   saved)
         else:
-            if i + 1 < len(net.layers):
+            if i + 1 < n:
                 nxt = net.layers[i + 1].layer
-                glue = GlueSpec(kind=resolve_chain(
+                spec = GlueSpec(kind=resolve_chain(
                     lay.name, lay.oc, carry_c, nxt.name, nxt.ic))
             else:
-                glue = GlueSpec(kind="last")
-        layers.append(LayerPlan(
-            mapping=m, executor=ex, schedule=layer_schedule(m),
-            glue=glue, carry_c=carry_c if net.glue is None or not chained
-            else lay.ic, use_mesh=use_mesh,
-            interpret=interpret, block=block, vmem_budget=vmem_budget))
-        if net.glue is None or not chained:
-            carry_c = net.layers[i + 1].layer.ic \
-                if i + 1 < len(net.layers) else lay.oc
-    if chained and net.glue is not None and saved:
+                spec = GlueSpec(kind="last")
+            carry_c = net.layers[i + 1].layer.ic if i + 1 < n else lay.oc
+        glue.append(spec)
+    if net.glue is not None and saved:
         raise ValueError(
             f"{net.name}: {len(saved)} saved residual input(s) never "
             f"consumed by a kind='residual' glue")
-    return NetworkPlan(net=net, layers=tuple(layers),
-                       mesh_axes=mesh_axes(mesh), batch=batch,
-                       chained=chained, lookahead=lookahead)
+    # carries[i] == layers[i].ic in every valid plan (the simulation
+    # above raises otherwise) — recorded explicitly so later passes
+    # read the glue pass's product, not channel arithmetic of their own
+    return replace(d, glue=tuple(glue), carries=tuple(carries))
+
+
+def pass_estimate_memory(d: PlanDraft) -> PlanDraft:
+    """Per-layer live-byte estimates (exec/memory.py).  ``batch=None``
+    plans price a single example — the estimate scales linearly, and
+    the segment boundaries it drives depend only on the ratios."""
+    mem = memlib.network_memory(d.net, d.carries,
+                                d.batch if d.batch else 1)
+    return replace(d, mem=mem)
+
+
+def pass_segment(d: PlanDraft) -> PlanDraft:
+    """Choose rematerialization boundaries (exec/remat.py).  Chained
+    plans cut only at the glue pass's legal boundaries; layerwise plans
+    (`apply_cnn`, which owns its own glue) may cut anywhere."""
+    if d.remat is None:
+        return d                    # remat off: segments stays None
+    if d.chained:
+        allowed = rematlib.allowed_cuts(d.glue)
+    else:
+        allowed = tuple(range(len(d.net.layers) - 1))
+    return replace(d, segments=rematlib.plan_segments(d.mem, allowed,
+                                                      d.remat))
+
+
+def pass_schedule(d: PlanDraft) -> PlanDraft:
+    """Super-step schedules, with steps==cycles asserted per layer —
+    at compile time, never at dispatch."""
+    scheds = []
+    for m in d.net.layers:
+        check_steps(m)
+        scheds.append(layer_schedule(m))
+    return replace(d, schedules=tuple(scheds))
+
+
+#: The pipeline, in order.  Each pass is PlanDraft -> PlanDraft; new
+#: analyses insert here without touching dispatch or the freeze step.
+PASSES: Tuple[Callable[[PlanDraft], PlanDraft], ...] = (
+    pass_validate, pass_resolve_executors, pass_check_glue,
+    pass_estimate_memory, pass_segment, pass_schedule)
+
+
+def _freeze(d: PlanDraft) -> NetworkPlan:
+    """Assemble the frozen IR from a fully-analyzed draft."""
+    layers = tuple(
+        LayerPlan(mapping=m, executor=ex, schedule=sch, glue=g,
+                  carry_c=c, use_mesh=um, interpret=d.interpret,
+                  block=d.block, vmem_budget=d.vmem_budget,
+                  act_bytes=mm.act_bytes, weight_bytes=mm.weight_bytes)
+        for m, ex, sch, g, c, um, mm in zip(
+            d.net.layers, d.execs, d.schedules, d.glue, d.carries,
+            d.use_mesh, d.mem))
+    return NetworkPlan(net=d.net, layers=layers,
+                       mesh_axes=mesh_axes(d.mesh), batch=d.batch,
+                       chained=d.chained, lookahead=d.lookahead,
+                       segments=d.segments)
+
+
+def _compile(net: NetworkMapping, execs: Tuple[str, ...], mesh,
+             batch: Optional[int], chained: bool, interpret: bool,
+             block: str, vmem_budget: int, lookahead: int,
+             remat_spec=None) -> NetworkPlan:
+    draft = PlanDraft(net=net, execs=execs, mesh=mesh, batch=batch,
+                      chained=chained, interpret=interpret, block=block,
+                      vmem_budget=vmem_budget, lookahead=lookahead,
+                      remat=remat_spec)
+    for p in PASSES:
+        draft = p(draft)
+    return _freeze(draft)
 
 
 def _check_explicit_glue(net: NetworkMapping, i: int, spec: GlueSpec,
@@ -302,7 +482,8 @@ def compile_plan(net: NetworkMapping, *,
                  interpret: Optional[bool] = None,
                  block: Optional[str] = None,
                  vmem_budget: Optional[int] = None,
-                 lookahead: Optional[int] = None) -> NetworkPlan:
+                 lookahead: Optional[int] = None,
+                 remat: rematlib.RematSpec = None) -> NetworkPlan:
     """Lower ``net`` once into a :class:`NetworkPlan`.
 
     ``executor_policy`` — ``"auto"`` (per-layer heuristic, see
@@ -322,15 +503,26 @@ def compile_plan(net: NetworkMapping, *,
     ``lookahead`` (default 1) is the fused program's cross-layer
     pipeline depth; ``vmem_budget`` (default: the
     ``REPRO_SDK_VMEM_BUDGET`` environment variable, else 8 MiB) bounds
-    the sdk executor's ``block="auto"`` whole-array working set.  With
-    ``executor_policy="tuned"`` any of ``lookahead`` / ``block`` /
-    ``vmem_budget`` left unset take the tuned values.
+    the sdk executor's ``block="auto"`` whole-array working set.
+
+    ``remat`` asks the segment pass for rematerialization boundaries:
+    ``None``/``"off"`` (no segmentation — the default), ``"auto"``
+    (budget from ``REPRO_TRAIN_MEM_BUDGET`` bytes if set, else the
+    sqrt-segments heuristic), an ``int`` peak-byte budget, or an
+    explicit sequence of boundary layer indices (cut *after* each;
+    illegal cuts — mid concat group, over an outstanding residual —
+    raise).  `execute_plan` then wraps each segment in `jax.checkpoint`
+    (exec/remat.py).
+
+    With ``executor_policy="tuned"`` any of ``lookahead`` / ``block`` /
+    ``vmem_budget`` / ``remat`` left unset take the tuned values (pass
+    ``remat="off"`` to force remat off under a tuned policy).
 
     Every layer's executed schedule is asserted equal to its
     ``LayerMapping.cycles`` here (compile time), and a mis-chained
     network raises the chaining error here too.  Results are memoized —
     in memory and, when a disk cache is configured, across processes —
-    keyed on (net, resolved policy, mesh shape, batch, flags).
+    keyed on (net, resolved policy, mesh shape, batch, flags, remat).
     """
     from repro.kernels.im2win_conv import default_vmem_budget
     if not net.layers:
@@ -352,6 +544,8 @@ def compile_plan(net: NetworkMapping, *,
                 block = cfg.candidate.block
             if vmem_budget is None:
                 vmem_budget = cfg.candidate.vmem_budget
+            if remat is None:
+                remat = getattr(cfg.candidate, "remat", None)
     if lookahead is None:
         lookahead = 1
     if lookahead < 0:
@@ -360,15 +554,16 @@ def compile_plan(net: NetworkMapping, *,
         block = "auto"
     if vmem_budget is None:
         vmem_budget = default_vmem_budget()
+    remat_spec = rematlib.canonical_remat(remat)
     execs = _resolve_policy(executor_policy, net,
                             backend=jax.default_backend())
     key = (net, execs, mesh_axes(mesh), batch, chained, interpret, block,
-           vmem_budget, lookahead)
+           vmem_budget, lookahead, remat_spec)
 
     def _compile_counted():
         _note_compile(key)
         return _compile(net, execs, mesh, batch, chained, interpret,
-                        block, vmem_budget, lookahead)
+                        block, vmem_budget, lookahead, remat_spec)
 
     return memo.cached_plan(key, _compile_counted)
 

@@ -114,47 +114,84 @@ def _forward(plan: NetworkPlan, kernels, x: jnp.ndarray, mesh,
     # nonlinearity — the network-global activation applies only to
     # inferred-glue (CNN) plans, where no GlueSpec.act is ever set
     explicit = plan.net.glue is not None
+
+    def _segment(s, e, x, seg_kernels, seg_consts):
+        """Layers [s, e) on carry ``x`` — the whole net in one call for
+        unsegmented plans, one `jax.checkpoint` body per plan segment
+        otherwise.  The saved-residual stack is segment-local: the
+        segment pass only cuts where it is empty (exec/remat.py)."""
+        seg_kernels = list(seg_kernels)
+        saved = []                  # GlueSpec.save stack (residual bases)
+        for i in range(s, e):
+            lp = plan.layers[i]
+            lay = lp.mapping.layer
+            spec = lp.glue
+            xp = fit_spatial(x, lay.i_h, lay.i_w)
+            if spec.save:           # residual base: the pre-norm input
+                saved.append(xp)
+            xin = layernorm(xp) if spec.pre == "layernorm" else xp
+            y = conv(lp, xin, seg_kernels[i - s]) if conv is not None \
+                else _layer_conv(
+                    lp, xin, seg_kernels[i - s], mesh, jitted=jitted,
+                    prepared=None if seg_consts is None
+                    else seg_consts[i - s])
+            if spec.act != "none":
+                y = ACTIVATIONS[spec.act](y)
+            elif activation is not None and not explicit:
+                y = activation(y)
+            if spec.post == "attention":
+                # the opaque stage between mapped qkv and o projections —
+                # glue, not a mapped layer, so cycle accounting is
+                # untouched
+                y = attention_stage(y, spec.heads, spec.causal,
+                                    interpret=lp.interpret)
+            if spec.kind == "concat":
+                skip = center_crop(xp, y.shape[-2], y.shape[-1])
+                x = jnp.concatenate([skip, y], axis=1)
+            elif spec.kind == "residual":
+                # channel match was validated at compile time; saved
+                # bases are deliberately NOT threaded through the
+                # lookahead fence — they are live carries, not
+                # kernel-side prep
+                x = saved.pop() + y
+            else:                   # "chain" / "last"
+                x = y
+            # cross-layer pipeline depth (plan.lookahead, a compile_plan
+            # argument since ISSUE 6): kernels of layers beyond
+            # ``i + 1 + lookahead`` stay fenced behind this carry, so
+            # that many layers of kernel-side prep (weight-matrix
+            # blocks, gather indices) may overlap the current psum
+            # drain while the live working set stays bounded.  The
+            # window is clamped to the segment (``j < e``): pipelining
+            # never reaches across a checkpoint boundary
+            j = i + 1 + plan.lookahead
+            if fused and j < e:
+                # bounded pipelining (module docstring): layers past the
+                # lookahead window cannot start until this carry exists
+                x, *rest = _fence((x, *seg_kernels[j - s:]))
+                seg_kernels[j - s:] = rest
+        return x
+
     kernels = list(kernels)
-    saved = []                      # GlueSpec.save stack (residual bases)
-    for i, lp in enumerate(plan.layers):
-        lay = lp.mapping.layer
-        spec = lp.glue
-        xp = fit_spatial(x, lay.i_h, lay.i_w)
-        if spec.save:               # residual base: the pre-norm input
-            saved.append(xp)
-        xin = layernorm(xp) if spec.pre == "layernorm" else xp
-        y = conv(lp, xin, kernels[i]) if conv is not None else \
-            _layer_conv(lp, xin, kernels[i], mesh, jitted=jitted,
-                        prepared=None if consts is None else consts[i])
-        if spec.act != "none":
-            y = ACTIVATIONS[spec.act](y)
-        elif activation is not None and not explicit:
-            y = activation(y)
-        if spec.post == "attention":
-            # the opaque stage between mapped qkv and o projections —
-            # glue, not a mapped layer, so cycle accounting is untouched
-            y = attention_stage(y, spec.heads, spec.causal,
-                                interpret=lp.interpret)
-        if spec.kind == "concat":
-            skip = center_crop(xp, y.shape[-2], y.shape[-1])
-            x = jnp.concatenate([skip, y], axis=1)
-        elif spec.kind == "residual":
-            # channel match was validated at compile time; saved bases
-            # are deliberately NOT threaded through the lookahead fence —
-            # they are live carries, not kernel-side prep
-            x = saved.pop() + y
-        else:                       # "chain" / "last"
-            x = y
-        # cross-layer pipeline depth (plan.lookahead, a compile_plan
-        # argument since ISSUE 6): kernels of layers beyond
-        # ``i + 1 + lookahead`` stay fenced behind this carry, so that
-        # many layers of kernel-side prep (weight-matrix blocks, gather
-        # indices) may overlap the current psum drain while the live
-        # working set stays bounded
-        j = i + 1 + plan.lookahead
-        if fused and j < len(plan.layers):
-            # bounded pipelining (module docstring): layers past the
-            # lookahead window cannot start until this carry exists
+    consts_l = None if consts is None else list(consts)
+    spans = plan.spans
+    if not fused or len(spans) == 1:
+        # unsegmented (or per-layer/oracle dispatch, which never
+        # checkpoints): the PR-4 program shape, bit for bit
+        return _segment(0, len(plan.layers), x, kernels, consts_l)
+    for s, e in spans:
+        seg_c = None if consts_l is None else tuple(consts_l[s:e])
+        # jax.checkpoint per segment: the backward re-runs the segment
+        # from its boundary carry instead of saving every layer's
+        # residuals — the memory model DESIGN.md §13 prices
+        x = jax.checkpoint(functools.partial(_segment, s, e))(
+            x, tuple(kernels[s:e]), seg_c)
+        j = e + plan.lookahead
+        if j < len(plan.layers):
+            # the boundary acts as the fence for later segments: their
+            # kernel-side prep (beyond the lookahead window) waits on
+            # the carry crossing the boundary, exactly as it would have
+            # at a plain layer boundary
             x, *rest = _fence((x, *kernels[j:]))
             kernels[j:] = rest
     return x

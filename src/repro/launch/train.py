@@ -6,9 +6,17 @@ the production mesh.  Wires together: config -> sharded init ->
 TokenStream pipeline -> train_step -> CheckpointStore + TrainSupervisor
 (heartbeats, straggler log, restart-exact resume).
 
+``--plan-net <network>`` switches to the CNN plan trainer instead: the
+named bench network (core/networks.py) is mapped, compiled to a chained
+NetworkPlan, and its kernels train through `execute_plan` with
+rematerialization (`--remat off|auto|<bytes>`) and gradient accumulation
+(`--accum K`) — `repro.cnn.train.train_plan`, DESIGN.md §13.
+
 Usage:
     python -m repro.launch.train --arch stablelm_1_6b --smoke \
         --steps 100 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+    python -m repro.launch.train --plan-net densenet40 --remat auto \
+        --steps 10 --batch 8 --accum 2
 """
 from __future__ import annotations
 
@@ -43,7 +51,18 @@ def main(argv=None) -> None:
     ap.add_argument("--save-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan-net", default=None,
+                    help="train this bench network through the plan "
+                         "trainer (cnn/train.train_plan) instead of the "
+                         "transformer loop")
+    ap.add_argument("--remat", default="off",
+                    help="plan trainer: off | auto | <peak budget bytes>")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="plan trainer: microbatches per optimizer step")
     args = ap.parse_args(argv)
+
+    if args.plan_net is not None:
+        return _plan_main(args)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     tc = TrainConfig(microbatches=args.microbatches, peak_lr=args.lr,
@@ -77,6 +96,33 @@ def main(argv=None) -> None:
     store.wait()
     print(f"done: {last} steps in {time.time()-t0:.1f}s; "
           f"events={sup.events[-3:]}")
+
+
+def _plan_main(args) -> None:
+    """The --plan-net path: map the named network and train its kernels
+    through the compiled plan (module docstring)."""
+    from repro.cnn.train import train_plan
+    from repro.core import ArrayConfig, MacroGrid, map_net, networks
+    if args.plan_net not in networks.NETWORKS:
+        raise SystemExit(f"unknown network {args.plan_net!r} "
+                         f"(have: {sorted(networks.NETWORKS)})")
+    remat = None if args.remat == "off" else (
+        args.remat if args.remat == "auto" else int(args.remat))
+    net = map_net(args.plan_net, networks.NETWORKS[args.plan_net](),
+                  ArrayConfig(64, 64), "TetrisG-SDK", MacroGrid(2, 2))
+    t0 = time.time()
+    losses: list = []
+    r = train_plan(net, steps=args.steps, batch=args.batch, lr=args.lr,
+                   seed=args.seed, accum=args.accum, remat=remat,
+                   losses=losses)
+    for i, lv in enumerate(losses):
+        if i % 10 == 0 or i == len(losses) - 1:
+            print(f"step {i + 1:>5d}  loss {lv:.4f}", flush=True)
+    print(f"done: {r.steps} steps in {time.time() - t0:.1f}s; "
+          f"loss {r.first_loss:.4f} -> {r.final_loss:.4f}; "
+          f"peak~{r.peak_mb:.0f}MB (unremat {r.unremat_peak_mb:.0f}MB, "
+          f"{r.segments} segment(s), accum={r.accum}, "
+          f"donated={r.donated})")
 
 
 def _metric_logger(step_fn, t0, every: int = 10):

@@ -49,8 +49,13 @@ def adamw_update(params, grads, opt_state, lr, cfg: AdamWConfig
         mh = m_ / (1 - b1 ** step.astype(jnp.float32))
         vh = v_ / (1 - b2 ** step.astype(jnp.float32))
         p32 = p.astype(jnp.float32)
-        p_new = p32 - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
-                            + cfg.weight_decay * p32)
+        # decoupled weight decay, applied as its own term: the Adam
+        # step ``lr*mh/(sqrt(vh)+eps)`` keeps the textbook association,
+        # so with weight_decay=0 the update is bit-identical to a plain
+        # Adam implementation (the CNN trainer's regression contract —
+        # tests/test_train_plan.py)
+        p_new = (p32 - lr * mh / (jnp.sqrt(vh) + cfg.eps)
+                 - lr * cfg.weight_decay * p32)
         return p_new.astype(p.dtype), m_, v_
 
     flat_p, treedef = jax.tree.flatten(params)

@@ -203,7 +203,8 @@ def default_runner(net, *, batch: int, devices=None,
         plan = compile_plan(net, executor_policy=cand.policy, mesh=mesh,
                             batch=plan_batch, chained=chained,
                             lookahead=cand.lookahead, block=cand.block,
-                            vmem_budget=cand.vmem_budget)
+                            vmem_budget=cand.vmem_budget,
+                            remat=cand.remat)
         if chained:
             x = jnp.asarray(rng.randn(plan_batch, first.ic, first.i_h,
                                       first.i_w), jnp.float32)

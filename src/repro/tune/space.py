@@ -56,6 +56,11 @@ class Candidate:
     tiers: Optional[Tuple[int, ...]] = None   # plan-batch ladder (None:
                                               # the power-of-two default)
     mesh_split: Optional[Tuple[int, int, int]] = None  # (data, row, col)
+    #: rematerialization spec forwarded to `compile_plan(remat=...)` —
+    #: None (off), "auto", a byte budget, or explicit cut indices; the
+    #: autotuner can trade recompute cycles for live memory with it
+    #: (training workloads — serving plans never differentiate)
+    remat: object = None
 
     @property
     def base(self) -> Tuple:
@@ -76,6 +81,8 @@ class Candidate:
             bits.append(f"vmem={self.vmem_budget}")
         if self.tiers is not None:
             bits.append(f"tiers={'/'.join(str(t) for t in self.tiers)}")
+        if self.remat is not None:
+            bits.append(f"remat={self.remat}")
         return " ".join(bits)
 
 
@@ -187,11 +194,15 @@ def enumerate_space(net, *, batch: int, devices=None,
                     vmem_budgets: Sequence[Optional[int]] = (None,),
                     tiers_options: Sequence[Optional[Tuple[int, ...]]] =
                     (None,),
-                    mesh_splits=None) -> Tuple[Candidate, ...]:
+                    mesh_splits=None,
+                    remats: Sequence = (None,)) -> Tuple[Candidate, ...]:
     """The full joint space (deduplicated, deterministic order): policy
-    seeds x mesh splits x lookahead x sdk knobs x tier sets.  sdk block
-    / vmem variants only expand policies that actually run sdk layers —
-    they are no-ops elsewhere and would only dilute the shortlist."""
+    seeds x mesh splits x lookahead x sdk knobs x tier sets x remat
+    specs.  sdk block / vmem variants only expand policies that actually
+    run sdk layers — they are no-ops elsewhere and would only dilute the
+    shortlist.  ``remats`` defaults to remat-off only (serving never
+    differentiates); training tuners pass e.g. ``(None, "auto")`` to
+    let the search trade recompute cycles for live memory."""
     from repro.launch import mesh as meshlib
     if mesh_splits is None:
         mesh_splits = meshlib.mesh_split_candidates(net, batch, devices)
@@ -203,11 +214,13 @@ def enumerate_space(net, *, batch: int, devices=None,
                 for blk in (blocks if has_sdk else ("auto",)):
                     for vb in (vmem_budgets if has_sdk else (None,)):
                         for tiers in tiers_options:
-                            c = Candidate(policy=policy, lookahead=la,
-                                          block=blk, vmem_budget=vb,
-                                          tiers=tiers, mesh_split=split)
-                            if c not in out:
-                                out.append(c)
+                            for rm in remats:
+                                c = Candidate(policy=policy, lookahead=la,
+                                              block=blk, vmem_budget=vb,
+                                              tiers=tiers, mesh_split=split,
+                                              remat=rm)
+                                if c not in out:
+                                    out.append(c)
     return tuple(out)
 
 

@@ -1,0 +1,193 @@
+"""The shared training step (cnn/train.py, DESIGN.md §13): the
+hand-rolled-Adam → optim/adamw bitwise regression, gradient
+accumulation and pad-and-mask exactness, the one-compile-per-shape
+rider, and the forced-memory-budget → remat="auto" acceptance path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ArrayConfig, MacroGrid, map_net, memo, networks
+from repro.cnn.models import cnn8_config
+from repro.cnn.train import (ADAM, _accum_grads, _microbatched,
+                             _pad_and_mask, train_cnn, train_plan)
+from repro.exec import compile_plan
+from repro.exec.plan import compile_counts
+from repro.optim.adamw import adamw_init, adamw_update
+
+RNG = np.random.RandomState(3)
+
+
+# ------------------------------------------------------------ optimizer
+
+def test_adamw_step_bitwise_matches_handrolled_adam():
+    """The optimizer dedup contract: with :data:`ADAM` (decay/clip off),
+    `adamw_update` reproduces the hand-rolled closure it replaced
+    BIT-FOR-BIT, step after step, under jit — the trainers changed
+    modules without changing a single parameter bit."""
+    lr = 3e-3
+    params = {"w": jnp.asarray(RNG.randn(6, 6), jnp.float32),
+              "b": jnp.asarray(RNG.randn(6), jnp.float32)}
+
+    @jax.jit
+    def old_step(params, opt, grads):
+        # the pre-ISSUE-10 train_cnn closure, verbatim
+        m = jax.tree.map(lambda m_, g: 0.9 * m_ + 0.1 * g,
+                         opt["m"], grads)
+        v = jax.tree.map(lambda v_, g: 0.999 * v_ + 0.001 * g * g,
+                         opt["v"], grads)
+        t = opt["t"] + 1
+
+        def upd(p, m_, v_):
+            mh = m_ / (1 - 0.9 ** t)
+            vh = v_ / (1 - 0.999 ** t)
+            return p - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}
+
+    @jax.jit
+    def new_step(params, opt, grads):
+        p, o, _ = adamw_update(params, grads, opt, lr, ADAM)
+        return p, o
+
+    p_old = p_new = params
+    o_old = {"m": jax.tree.map(jnp.zeros_like, params),
+             "v": jax.tree.map(jnp.zeros_like, params),
+             "t": jnp.zeros((), jnp.int32)}
+    o_new = adamw_init(params)
+    for i in range(50):
+        grads = jax.tree.map(
+            lambda p: jnp.asarray(RNG.randn(*p.shape), jnp.float32),
+            params)
+        p_old, o_old = old_step(p_old, o_old, grads)
+        p_new, o_new = new_step(p_new, o_new, grads)
+        for k in params:
+            np.testing.assert_array_equal(
+                np.asarray(p_old[k]), np.asarray(p_new[k]),
+                err_msg=f"step {i} param {k} diverged")
+
+
+# --------------------------------------------------- accumulation + pad
+
+def _toy_loss_sum(params, x, y, mask):
+    per = (x @ params["w"] - y) ** 2
+    return (per * mask).sum()
+
+
+def test_pad_and_mask_grads_exact():
+    """Padding a ragged tail to the compiled shape must not change the
+    gradient AT ALL: the padded rows contribute exact float zeros, so
+    the padded sum-then-divide is bitwise the unpadded one."""
+    params = {"w": jnp.asarray(RNG.randn(5), jnp.float32)}
+    x = jnp.asarray(RNG.randn(6, 5), jnp.float32)
+    y = jnp.asarray(RNG.randn(6), jnp.float32)
+
+    def sum_loss(params):
+        return ((x @ params["w"] - y) ** 2).sum()
+    g_sum = jax.grad(sum_loss)(params)
+    g_ref = jax.tree.map(lambda g: g / 6.0, g_sum)
+
+    xp, yp, mask = _pad_and_mask(x, y, 8)
+    assert xp.shape[0] == 8 and float(mask.sum()) == 6.0
+    loss, g = _accum_grads(_toy_loss_sum, params,
+                           *_microbatched(xp, yp, mask, 1))
+    np.testing.assert_array_equal(np.asarray(g["w"]),
+                                  np.asarray(g_ref["w"]))
+    np.testing.assert_array_equal(np.asarray(loss),
+                                  np.asarray(sum_loss(params) / 6.0))
+
+
+def test_accumulation_matches_whole_batch():
+    """K scanned microbatches, summed then divided once == the
+    whole-batch mean gradient (up to f32 summation order)."""
+    params = {"w": jnp.asarray(RNG.randn(5), jnp.float32)}
+    x = jnp.asarray(RNG.randn(8, 5), jnp.float32)
+    y = jnp.asarray(RNG.randn(8), jnp.float32)
+    mask = jnp.ones((8,), jnp.float32)
+    _, g1 = _accum_grads(_toy_loss_sum, params,
+                         *_microbatched(x, y, mask, 1))
+    for accum in (2, 4):
+        _, gk = _accum_grads(_toy_loss_sum, params,
+                             *_microbatched(x, y, mask, accum))
+        np.testing.assert_allclose(np.asarray(gk["w"]),
+                                   np.asarray(g1["w"]), rtol=1e-6)
+
+
+def test_train_cnn_validates_accum():
+    with pytest.raises(ValueError, match="accum"):
+        train_cnn(cnn8_config(), steps=1, batch=8, accum=3)
+
+
+def test_train_cnn_remat_requires_plan_executor():
+    with pytest.raises(ValueError, match="remat"):
+        train_cnn(cnn8_config(), steps=1, batch=8, remat="auto",
+                  executor="reference")
+
+
+# ---------------------------------------------------------------- rider
+
+def test_one_compile_per_shape_despite_ragged_tail():
+    """The bugfix rider: with n_train < batch every step is ragged —
+    pad-and-mask keeps the compiled step at ONE shape, so every plan
+    cache key lowers exactly once (`exec.plan.compile_counts`)."""
+    memo.clear()                      # resets the compile counters too
+    train_cnn(cnn8_config(group=1), steps=3, batch=8, accum=2,
+              n_train=6, n_test=6, executor="mapped",
+              array=ArrayConfig(64, 64))
+    counts = compile_counts()
+    assert counts, "the mapped trainer must compile through plans"
+    assert all(n == 1 for n in counts.values()), counts
+
+
+# ----------------------------------------------------------- plan scale
+
+def _densenet_prefix():
+    return map_net("densenet40_p", networks.densenet40()[:14],
+                   ArrayConfig(64, 64), "TetrisG-SDK", MacroGrid(2, 2),
+                   groups=(1, 2))
+
+
+def test_train_plan_budget_refusal_and_auto_remat(monkeypatch):
+    """The acceptance path at test scale: under a forced
+    REPRO_TRAIN_MEM_BUDGET between the segmented and unremat'd peak
+    estimates, the flat plan refuses to train (deterministic OOM
+    stand-in) and ``remat="auto"`` segments under the budget and
+    trains, loss finite and moving."""
+    net = _densenet_prefix()
+    monkeypatch.delenv("REPRO_TRAIN_MEM_BUDGET", raising=False)
+    flat = compile_plan(net, executor_policy="reference", batch=2)
+    cut = compile_plan(net, executor_policy="reference", batch=2,
+                       remat=(12,))
+    assert cut.peak_bytes < flat.peak_bytes
+    budget = (cut.peak_bytes + flat.peak_bytes) // 2
+    monkeypatch.setenv("REPRO_TRAIN_MEM_BUDGET", str(budget))
+
+    with pytest.raises(MemoryError, match="exceeds"):
+        train_plan(net, steps=1, batch=2, n_train=16)
+
+    losses: list = []
+    r = train_plan(net, steps=2, batch=2, remat="auto", n_train=16,
+                   losses=losses)
+    assert r.segments == 2
+    assert r.peak_mb < budget / 1e6 < r.unremat_peak_mb
+    assert len(losses) == 2 and all(np.isfinite(losses))
+    assert r.first_loss == losses[0] and r.final_loss == losses[-1]
+
+
+def test_train_plan_validates_accum():
+    net = _densenet_prefix()
+    with pytest.raises(ValueError, match="accum"):
+        train_plan(net, steps=1, batch=3, accum=2)
+
+
+# -------------------------------------------------------------- tuning
+
+def test_candidate_remat_in_space_and_describe():
+    from repro.tune.space import Candidate, enumerate_space
+    c = Candidate(policy=("mapped",), remat="auto")
+    assert "remat=auto" in c.describe()
+    assert "remat" not in Candidate(policy=("mapped",)).describe()
+    net = _densenet_prefix()
+    base = enumerate_space(net, batch=2)
+    both = enumerate_space(net, batch=2, remats=(None, "auto"))
+    assert len(both) == 2 * len(base)
+    assert {c.remat for c in both} == {None, "auto"}
